@@ -1,0 +1,40 @@
+"""Paper Fig. 5: convergence (loss) vs cumulative energy for SMB / SD /
+SLU / SLU+SMD / E²-Train."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.config import (E2TrainConfig, PSGConfig, SLUConfig,
+                               SMDConfig)
+from repro.core.energy import PSG_FACTOR_PAPER
+
+from benchmarks.common import csv_row, final_loss, run_lm
+
+
+def run(fast: bool = True) -> List[str]:
+    steps = 60 if fast else 240
+    variants = {
+        "smb": (E2TrainConfig(), dict()),
+        "slu": (E2TrainConfig(slu=SLUConfig(True, alpha=1e-3)), dict()),
+        "slu_smd": (E2TrainConfig(smd=SMDConfig(True),
+                                  slu=SLUConfig(True, alpha=1e-3)), dict()),
+        "e2train": (E2TrainConfig.full(),
+                    dict(lr=0.03, optimizer="psg")),
+    }
+    rows = []
+    for tag, (e2, kw) in variants.items():
+        hist, tr, wall = run_lm(e2, steps, **kw)
+        # per-executed-step energy factor for the x-axis
+        f = 1.0
+        if e2.slu.enabled:
+            f *= float(np.mean([h["slu_exec_ratio"] for h in hist[-10:]]))
+        if e2.psg.enabled:
+            f *= PSG_FACTOR_PAPER
+        curve = [round(h["loss"], 3) for h in hist[:: max(len(hist) // 8, 1)]]
+        rows.append(csv_row(
+            f"fig5/{tag}", wall / max(len(hist), 1) * 1e6,
+            f"final={final_loss(hist):.4f};energy_per_step={f:.3f};"
+            f"curve={'|'.join(map(str, curve))}"))
+    return rows

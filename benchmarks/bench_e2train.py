@@ -1,0 +1,36 @@
+"""Paper Tab. 3/4: combined E²-Train (SMD+SLU+PSG) savings + accuracy.
+
+Reproduces the computational-savings column *exactly* via the composition
+law (validated against the paper's numbers in tests/test_energy.py) and
+measures accuracy at each operating point on the synthetic task.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.config import (E2TrainConfig, PSGConfig, SLUConfig,
+                               SMDConfig)
+from repro.core.energy import (PSG_FACTOR_PAPER, computational_savings)
+
+from benchmarks.common import csv_row, eval_accuracy, final_loss, run_lm
+
+
+def run(fast: bool = True) -> List[str]:
+    steps = 160 if fast else 480
+    rows = []
+    # paper's three operating points: SLU skip 20/40/60%
+    for skip, alpha in ((0.2, 2e-3), (0.4, 1e-2), (0.6, 4e-2)):
+        e2 = E2TrainConfig(
+            smd=SMDConfig(enabled=True, drop_prob=0.5),
+            slu=SLUConfig(enabled=True, alpha=alpha,
+                          never_skip_first_last=False),
+            psg=PSGConfig(enabled=True))
+        hist, tr, wall = run_lm(e2, steps, lr=0.03, optimizer="psg")
+        comp = computational_savings(0.67, skip, PSG_FACTOR_PAPER)
+        rows.append(csv_row(
+            f"tab3/e2train_skip{int(skip*100)}",
+            wall / max(tr.executed_steps, 1) * 1e6,
+            f"loss={final_loss(hist):.4f};acc={eval_accuracy(tr):.4f};"
+            f"computational_saving={comp:.4f};"
+            f"paper={'0.8027' if skip == 0.2 else '0.8520' if skip == 0.4 else '0.9013'}"))
+    return rows

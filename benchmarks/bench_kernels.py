@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks: PSG pallas kernel vs jnp reference (interpret
+mode on CPU — wall time is NOT TPU-representative; the derived column
+reports the energy-model MAC ratio, which is the quantity of record)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import PSGConfig
+from repro.core.energy import FP32_MAC_PJ, mac_energy_pj
+from repro.core.psg import psg_grad_w_ref
+from repro.kernels import ops
+
+from benchmarks.common import csv_row
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(fast: bool = True) -> List[str]:
+    cfg = PSGConfig(enabled=True)
+    N, din, dout = (512, 256, 256) if fast else (2048, 1024, 1024)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (N, din))
+    gy = jax.random.normal(k2, (N, dout)) * 0.01
+    rows = []
+    us_k = _time(lambda a, b: ops.psg_grad_w(a, b, cfg), x, gy)
+    us_r = _time(lambda a, b: psg_grad_w_ref(a, b, cfg), x, gy)
+    pred_mac = mac_energy_pj(cfg.bits_x_msb, cfg.bits_g_msb) / FP32_MAC_PJ
+    rows.append(csv_row("kernel/psg_pallas", us_k,
+                        f"ref_us={us_r:.1f};pred_mac_vs_fp32={pred_mac:.4f}"))
+    us_q = _time(lambda a: ops.quantize(a, 8), x)
+    rows.append(csv_row("kernel/quantize", us_q, "bits=8"))
+
+    # flash attention vs unfused oracle (interpret mode; derived column
+    # reports the HBM-traffic ratio O(S*d)/O(S*T) that matters on TPU)
+    from repro.kernels.flash_attn import flash_attention
+    from repro.kernels.ref import flash_attention_oracle
+    B, S, nh, hd = (1, 256, 4, 64) if fast else (2, 1024, 8, 128)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, nh, hd))
+    kk = jax.random.normal(ks[1], (B, S, nh, hd))
+    vv = jax.random.normal(ks[2], (B, S, nh, hd))
+    us_f = _time(lambda a, b, c: flash_attention(a, b, c, bq=128, bk=128),
+                 q, kk, vv)
+    us_o = _time(flash_attention_oracle, q, kk, vv)
+    rows.append(csv_row("kernel/flash_attn", us_f,
+                        f"oracle_us={us_o:.1f};hbm_ratio={hd/S:.4f}"))
+    return rows

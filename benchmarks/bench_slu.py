@@ -1,0 +1,48 @@
+"""Paper Fig. 4: SLU (learned gates) vs Stochastic Depth (random skipping)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.core.config import (E2TrainConfig, Experiment, SLUConfig,
+                               TrainConfig)
+from repro.data.synthetic import make_lm_batch
+from repro.training.train_step import init_train_state
+from repro.training.trainer import Trainer
+
+from benchmarks.common import (TASK, TINY, csv_row, eval_accuracy,
+                               final_loss, run_lm)
+
+
+def _run_sd(keep_prob: float, steps: int):
+    """Stochastic depth baseline: SLU machinery with a *frozen* random gate
+    (clip the keep prob by setting min_keep_prob == the target and alpha
+    huge so the learned gate saturates at the floor = random skipping)."""
+    e2 = E2TrainConfig(slu=SLUConfig(enabled=True, alpha=50.0,
+                                     min_keep_prob=keep_prob,
+                                     never_skip_first_last=False))
+    return run_lm(e2, steps, alpha=50.0)
+
+
+def run(fast: bool = True) -> List[str]:
+    steps = 100 if fast else 400
+    rows = []
+    for alpha, tag in ((1e-3, "slu_mild"), (0.05, "slu_strong")):
+        e2 = E2TrainConfig(slu=SLUConfig(enabled=True, alpha=alpha,
+                                         never_skip_first_last=False))
+        hist, tr, wall = run_lm(e2, steps)
+        exec_ratio = float(np.mean([h["slu_exec_ratio"] for h in hist[-10:]]))
+        rows.append(csv_row(
+            f"fig4/{tag}", wall / steps * 1e6,
+            f"loss={final_loss(hist):.4f};acc={eval_accuracy(tr):.4f};"
+            f"exec_ratio={exec_ratio:.2f}"))
+    for kp, tag in ((0.8, "sd_skip20"), (0.6, "sd_skip40")):
+        hist, tr, wall = _run_sd(kp, steps)
+        rows.append(csv_row(
+            f"fig4/{tag}", wall / steps * 1e6,
+            f"loss={final_loss(hist):.4f};acc={eval_accuracy(tr):.4f};"
+            f"exec_ratio={kp:.2f}"))
+    return rows

@@ -1,0 +1,72 @@
+"""Shared benchmark harness: tiny-but-learnable task + timed training runs.
+
+Every paper table/figure gets one module; ``run.py`` drives them all and
+emits ``name,us_per_call,derived`` CSV rows.  The CNN/LM models are reduced
+(CPU container) but the *structure* matches the paper's experiments; energy
+numbers come from the paper's own 45nm per-op model (core/energy.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
+                               PSGConfig, SLUConfig, SMDConfig, TrainConfig)
+from repro.data.synthetic import MarkovLMTask, make_lm_batch
+from repro.training.train_step import init_train_state
+from repro.training.trainer import Trainer
+
+TINY = ModelConfig(name="bench", family="dense", num_layers=4, d_model=64,
+                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                   dtype="float32")
+TASK = MarkovLMTask(vocab=64)
+
+
+def run_lm(e2: E2TrainConfig, steps: int, *, lr: float = 0.1,
+           optimizer: str = "sgdm", seed: int = 0,
+           alpha: float = 1e-3, total_steps: Optional[int] = None,
+           model: ModelConfig = TINY) -> Tuple[List[Dict], Trainer, float]:
+    """Train the bench model; returns (history, trainer, wall_seconds)."""
+    exp = Experiment(
+        model=model, e2=e2,
+        train=TrainConfig(global_batch=16, seq_len=32, lr=lr,
+                          optimizer=optimizer, schedule="step",
+                          total_steps=total_steps or steps, seed=seed))
+    mk = lambda s, sh: make_lm_batch(TASK, seed, s, sh, 16, 32)
+    state = init_train_state(jax.random.PRNGKey(seed), exp)
+    tr = Trainer(exp, state, mk)
+    t0 = time.perf_counter()
+    hist = tr.run(steps)
+    wall = time.perf_counter() - t0
+    return hist, tr, wall
+
+
+def final_loss(hist: List[Dict], k: int = 5) -> float:
+    return float(np.mean([h["loss"] for h in hist[-k:]])) if hist else float("nan")
+
+
+def eval_accuracy(trainer: Trainer, n_batches: int = 4) -> float:
+    """Next-token top-1 accuracy on held-out synthetic batches."""
+    import jax.numpy as jnp
+    from repro.models import transformer as T
+    from repro.training.train_step import eval_params
+    params = eval_params(trainer.state, trainer.exp)
+    cfg = trainer.exp.model
+    correct = total = 0
+    for i in range(n_batches):
+        b = make_lm_batch(TASK, 999, i, 0, 16, 32)
+        out = T.lm_fwd(params, b["tokens"], cfg, train=False, remat="none")
+        pred = np.asarray(jnp.argmax(out.logits, -1))
+        lab = np.asarray(b["labels"])
+        m = lab >= 0
+        correct += (pred[m] == lab[m]).sum()
+        total += m.sum()
+    return correct / max(total, 1)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,51 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs longer budgets.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (smd,slu,psg,e2train,"
+                         "cnn,convergence,kernels,roofline)")
+    args = ap.parse_args(argv)
+    fast = not args.full
+
+    from benchmarks import (bench_cnn, bench_convergence, bench_e2train,
+                            bench_kernels, bench_psg, bench_slu, bench_smd,
+                            roofline)
+
+    benches = {
+        "smd": bench_smd.run,           # Fig. 3a/3b, Tab. 1
+        "slu": bench_slu.run,           # Fig. 4
+        "psg": bench_psg.run,           # Tab. 2
+        "e2train": bench_e2train.run,   # Tab. 3
+        "cnn": bench_cnn.run,           # Tab. 4 (paper backbones)
+        "convergence": bench_convergence.run,  # Fig. 5
+        "kernels": bench_kernels.run,
+        "roofline": roofline.run,       # §Roofline (from dry-run artifact)
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for row in fn(fast=fast):
+                print(row, flush=True)
+        except Exception as e:  # noqa
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end driver (deliverable b): train a ~100M-param LM for a few
+hundred steps with E²-Train, checkpointing + resume + SMD straggler policy.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 200
+    PYTHONPATH=src python examples/train_e2e.py --steps 300 --resume
+
+By default uses a ~100M-parameter llama-style config; --tiny shrinks it for
+fast CI runs.
+"""
+import argparse
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
+                               PSGConfig, SLUConfig, SMDConfig, TrainConfig)
+from repro.data.synthetic import MarkovLMTask, make_lm_batch
+from repro.ft.checkpoint import latest_step, restore_checkpoint
+from repro.training.train_step import init_train_state
+from repro.training.trainer import Trainer
+
+
+def model_100m() -> ModelConfig:
+    # ~109M params: 12L, d=768, 12H, kv 4, ff 2048, vocab 32k
+    return ModelConfig(name="lm-100m", family="dense", num_layers=12,
+                       d_model=768, num_heads=12, num_kv_heads=4,
+                       d_ff=2048, vocab_size=32000)
+
+
+def model_tiny() -> ModelConfig:
+    return ModelConfig(name="lm-tiny", family="dense", num_layers=4,
+                       d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
+                       vocab_size=512, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/e2train_ckpt")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    model = model_tiny() if args.tiny else model_100m()
+    print(f"model {model.name}: {model.param_count()/1e6:.1f}M params")
+
+    exp = Experiment(
+        model=model,
+        e2=E2TrainConfig(smd=SMDConfig(enabled=True, drop_prob=0.5),
+                         slu=SLUConfig(enabled=True, alpha=1e-3),
+                         psg=PSGConfig(enabled=True)),
+        train=TrainConfig(global_batch=args.batch, seq_len=args.seq,
+                          lr=0.03, optimizer="psg", total_steps=args.steps,
+                          schedule="step", microbatches=1))
+    task = MarkovLMTask(vocab=model.vocab_size)
+
+    def make_batch(step, shard):
+        return make_lm_batch(task, 0, step, shard, args.batch, args.seq)
+
+    state = init_train_state(jax.random.PRNGKey(0), exp)
+    if args.resume and latest_step(args.ckpt) is not None:
+        tree, step = restore_checkpoint(args.ckpt, state)
+        state = jax.tree.map(jax.numpy.asarray, tree)
+        print(f"resumed from checkpoint at step {step}")
+
+    trainer = Trainer(exp, state, make_batch, checkpoint_dir=args.ckpt,
+                      checkpoint_every=50, deadline_s=30.0)
+    hist = trainer.run(args.steps, log_every=10)
+    if hist:
+        print(f"\nfinal loss {np.mean([h['loss'] for h in hist[-5:]]):.4f} "
+              f"(bayes floor {task.bayes_xent():.3f}); "
+              f"executed {trainer.executed_steps}, "
+              f"SMD-dropped {trainer.dropped_steps}; "
+              f"checkpoints in {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

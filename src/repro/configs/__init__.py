@@ -1,0 +1,76 @@
+"""Architecture config registry: one module per assigned arch (+ the
+paper's own CNN backbones).  ``get_experiment(arch)`` returns the full
+production config; ``smoke_experiment(arch)`` a reduced same-family config
+for CPU smoke tests (small dims, tiny vocab, few experts)."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List
+
+from repro.core.config import Experiment, ModelConfig
+
+ARCH_IDS: List[str] = [
+    "deepseek_moe_16b",
+    "grok_1_314b",
+    "h2o_danube_3_4b",
+    "starcoder2_15b",
+    "llama3_8b",
+    "qwen2_5_3b",
+    "xlstm_350m",
+    "whisper_small",
+    "phi_3_vision_4_2b",
+    "zamba2_1_2b",
+]
+
+PAPER_ARCHS: List[str] = ["resnet74", "resnet110", "mobilenetv2"]
+
+
+def canon(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_experiment(arch: str) -> Experiment:
+    mod = importlib.import_module(f"repro.configs.{canon(arch)}")
+    return mod.get_config()
+
+
+def smoke_experiment(arch: str) -> Experiment:
+    mod = importlib.import_module(f"repro.configs.{canon(arch)}")
+    if hasattr(mod, "smoke_config"):
+        return mod.smoke_config()
+    return reduce_experiment(mod.get_config())
+
+
+def reduce_experiment(exp: Experiment) -> Experiment:
+    """Generic reduction: same family/block structure, toy dims."""
+    m = exp.model
+    unit = m.block_unit or ()
+    n_layers = max(len(unit), 2) if unit else 2
+    heads = min(m.num_heads, 4)
+    kv = max(1, min(m.num_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    small = dataclasses.replace(
+        m,
+        num_layers=n_layers,
+        d_model=64,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=64 // heads if m.head_dim == 0 else 16,
+        d_ff=96 if m.d_ff else 0,
+        moe_d_ff=48 if m.moe_d_ff else 0,
+        num_experts=min(m.num_experts, 4),
+        num_shared_experts=min(m.num_shared_experts, 1),
+        top_k=min(m.top_k, 2),
+        vocab_size=128,
+        ssm_state=min(m.ssm_state, 8) if m.ssm_state else 0,
+        sliding_window=min(m.sliding_window, 8) if m.sliding_window else 0,
+        encoder_layers=min(m.encoder_layers, 2),
+        frontend_tokens=8 if m.frontend else 0,
+        dtype="float32",
+    )
+    tr = dataclasses.replace(exp.train, global_batch=2, seq_len=16,
+                             total_steps=8, microbatches=1)
+    sv = dataclasses.replace(exp.serve, batch=2, prefill_len=16, max_kv_len=32)
+    return dataclasses.replace(exp, model=small, train=tr, serve=sv)

@@ -1,0 +1,13 @@
+"""deepseek-moe-16b [arXiv:2401.06066; hf]: 28L d_model=2048 16H (GQA kv=16)
+d_ff=1408 vocab=102400; fine-grained MoE, 64 routed experts top-6 + 2 shared."""
+from repro.core.config import Experiment, ModelConfig, TrainConfig
+
+
+def get_config() -> Experiment:
+    return Experiment(model=ModelConfig(
+        name="deepseek-moe-16b", family="moe",
+        num_layers=28, d_model=2048, num_heads=16, num_kv_heads=16,
+        d_ff=1408, moe_d_ff=1408, vocab_size=102400,
+        num_experts=64, num_shared_experts=2, top_k=6,
+        rope_theta=10000.0,
+    ), train=TrainConfig(optimizer="sgdm"))

@@ -1,0 +1,17 @@
+"""grok-1-314b [hf:xai-org/grok-1; unverified]: 64L d_model=6144 48H
+(GQA kv=8) d_ff=32768 vocab=131072; MoE 8 experts top-2."""
+from repro.core.config import Experiment, ModelConfig, TrainConfig
+
+
+def get_config() -> Experiment:
+    return Experiment(model=ModelConfig(
+        name="grok-1-314b", family="moe",
+        num_layers=64, d_model=6144, num_heads=48, num_kv_heads=8,
+        d_ff=32768, moe_d_ff=32768, vocab_size=131072,
+        num_experts=8, num_shared_experts=0, top_k=2,
+        rope_theta=10000.0,
+        # 314B on 256 chips: bf16 params+momentum (fp32 master would be
+        # 2.5 TB with optimizer state; production pairing is bf16 +
+        # stochastic rounding / sharded fp32 master at 512+ chips)
+        param_dtype="bfloat16",
+    ), train=TrainConfig(optimizer="sgdm", microbatches=8))

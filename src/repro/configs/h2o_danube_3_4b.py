@@ -1,0 +1,14 @@
+"""h2o-danube-3-4b [arXiv:2401.16818; unverified]: 24L d_model=3840 32H
+(GQA kv=8) d_ff=10240 vocab=32000; llama+mistral mix with sliding-window
+attention (window 4096) — the SWA gives this dense arch a sub-quadratic
+long-context path, so it runs the long_500k cell (DESIGN.md §5)."""
+from repro.core.config import Experiment, ModelConfig, TrainConfig
+
+
+def get_config() -> Experiment:
+    return Experiment(model=ModelConfig(
+        name="h2o-danube-3-4b", family="dense",
+        num_layers=24, d_model=3840, num_heads=32, num_kv_heads=8,
+        d_ff=10240, vocab_size=32000,
+        sliding_window=4096, rope_theta=10000.0,
+    ), train=TrainConfig(optimizer="sgdm"))

@@ -1,0 +1,11 @@
+"""llama3-8b [arXiv:2407.21783; unverified]: 32L d_model=4096 32H (GQA kv=8)
+d_ff=14336 vocab=128256; rope theta 500k."""
+from repro.core.config import Experiment, ModelConfig, TrainConfig
+
+
+def get_config() -> Experiment:
+    return Experiment(model=ModelConfig(
+        name="llama3-8b", family="dense",
+        num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+        d_ff=14336, vocab_size=128256, rope_theta=500000.0,
+    ), train=TrainConfig(optimizer="sgdm"))

@@ -1,0 +1,35 @@
+"""The paper's own backbones: ResNet-74, ResNet-110, MobileNetV2 on
+CIFAR-10/100 (§4.1) — the faithful-reproduction path."""
+from dataclasses import dataclass
+
+from repro.core.config import E2TrainConfig, TrainConfig
+
+
+@dataclass(frozen=True)
+class CNNExperiment:
+    name: str
+    depth: int                 # ResNet depth; 0 -> MobileNetV2
+    num_classes: int
+    train: TrainConfig
+    e2: E2TrainConfig
+
+
+def resnet74(num_classes: int = 10, e2: E2TrainConfig = None) -> CNNExperiment:
+    return CNNExperiment("resnet74", 74, num_classes,
+                         TrainConfig(global_batch=128, lr=0.1,
+                                     total_steps=64000, optimizer="sgdm"),
+                         e2 or E2TrainConfig())
+
+
+def resnet110(num_classes: int = 10, e2: E2TrainConfig = None) -> CNNExperiment:
+    return CNNExperiment("resnet110", 110, num_classes,
+                         TrainConfig(global_batch=128, lr=0.1,
+                                     total_steps=64000, optimizer="sgdm"),
+                         e2 or E2TrainConfig())
+
+
+def mobilenetv2(num_classes: int = 10, e2: E2TrainConfig = None) -> CNNExperiment:
+    return CNNExperiment("mobilenetv2", 0, num_classes,
+                         TrainConfig(global_batch=128, lr=0.05,
+                                     total_steps=64000, optimizer="sgdm"),
+                         e2 or E2TrainConfig())

@@ -1,0 +1,17 @@
+"""phi-3-vision-4.2b [hf:microsoft/Phi-3-vision-128k-instruct; hf]: 32L
+d_model=3072 32H (kv=32) d_ff=8192 vocab=32064; phi3-mini text backbone +
+CLIP vision frontend.  The CLIP tower is a STUB: ``input_specs`` provides
+precomputed patch embeddings (B, 576, d) prepended to the token stream."""
+from repro.core.config import Experiment, ModelConfig, TrainConfig
+
+PATCH_TOKENS = 576    # 24x24 CLIP-ViT-L/14 at 336px
+
+
+def get_config() -> Experiment:
+    return Experiment(model=ModelConfig(
+        name="phi-3-vision-4.2b", family="vlm",
+        num_layers=32, d_model=3072, num_heads=32, num_kv_heads=32,
+        d_ff=8192, vocab_size=32064,
+        frontend="vision", frontend_tokens=PATCH_TOKENS,
+        rope_theta=10000.0,
+    ), train=TrainConfig(optimizer="sgdm"))

@@ -1,0 +1,12 @@
+"""qwen2.5-3b [hf:Qwen/Qwen2.5-0.5B; hf]: 36L d_model=2048 16H (GQA kv=2)
+d_ff=11008 vocab=151936; QKV bias, tied embeddings."""
+from repro.core.config import Experiment, ModelConfig, TrainConfig
+
+
+def get_config() -> Experiment:
+    return Experiment(model=ModelConfig(
+        name="qwen2.5-3b", family="dense",
+        num_layers=36, d_model=2048, num_heads=16, num_kv_heads=2,
+        d_ff=11008, vocab_size=151936,
+        qkv_bias=True, tie_embeddings=True, rope_theta=1000000.0,
+    ), train=TrainConfig(optimizer="sgdm"))

@@ -1,0 +1,14 @@
+"""starcoder2-15b [arXiv:2402.19173; hf]: 40L d_model=6144 48H (GQA kv=4)
+d_ff=24576 vocab=49152; GQA + RoPE, layernorm, non-gated gelu MLP with
+biases (the StarCoder2 recipe)."""
+from repro.core.config import Experiment, ModelConfig, TrainConfig
+
+
+def get_config() -> Experiment:
+    return Experiment(model=ModelConfig(
+        name="starcoder2-15b", family="dense",
+        num_layers=40, d_model=6144, num_heads=48, num_kv_heads=4,
+        d_ff=24576, vocab_size=49152,
+        norm="layernorm", act="gelu", glu=False,
+        qkv_bias=True, mlp_bias=True, rope_theta=100000.0,
+    ), train=TrainConfig(optimizer="sgdm", microbatches=4))

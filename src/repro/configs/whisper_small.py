@@ -1,0 +1,19 @@
+"""whisper-small [arXiv:2212.04356; unverified]: enc-dec, 12L each,
+d_model=768 12H d_ff=3072 vocab=51865.  The conv/log-mel frontend is a STUB:
+``input_specs`` provides precomputed frame embeddings (B, 1500, d) as the
+encoder input (assignment note for [audio] entries).  RoPE replaces the
+learned positional embeddings (TPU-idiomatic; documented deviation)."""
+from repro.core.config import Experiment, ModelConfig, ServeConfig, TrainConfig
+
+AUDIO_FRAMES = 1500   # 30 s at the whisper frame rate
+
+
+def get_config() -> Experiment:
+    return Experiment(model=ModelConfig(
+        name="whisper-small", family="audio",
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+        d_ff=3072, vocab_size=51865,
+        norm="layernorm", act="gelu", glu=False,
+        encoder_layers=12, cross_attention=True,
+        frontend="audio", frontend_tokens=AUDIO_FRAMES,
+    ), train=TrainConfig(optimizer="sgdm"))

@@ -1,0 +1,14 @@
+"""xlstm-350m [arXiv:2405.04517; unverified]: 24L d_model=1024 4H d_ff=0
+vocab=50304; mLSTM + sLSTM blocks (3:1 unit), recurrent decode — runs the
+long_500k cell via O(1)-state decoding."""
+from repro.core.config import (BLOCK_MLSTM, BLOCK_SLSTM, Experiment,
+                               ModelConfig, TrainConfig)
+
+
+def get_config() -> Experiment:
+    return Experiment(model=ModelConfig(
+        name="xlstm-350m", family="ssm",
+        num_layers=24, d_model=1024, num_heads=4, num_kv_heads=4,
+        d_ff=0, vocab_size=50304, glu=False,
+        block_unit=(BLOCK_MLSTM, BLOCK_MLSTM, BLOCK_MLSTM, BLOCK_SLSTM),
+    ), train=TrainConfig(optimizer="sgdm"))

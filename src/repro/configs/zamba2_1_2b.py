@@ -1,0 +1,17 @@
+"""zamba2-1.2b [arXiv:2411.15242; hf]: 38L d_model=2048 32H (kv=32)
+d_ff=8192 ssm_state=64 vocab=32000; Mamba2 blocks + a weight-SHARED
+attention block invoked periodically (2 shared invocations in the 38-block
+schedule: unit = 18 mamba + 1 shared_attn, tiled x2).  The shared block is
+exempt from SLU gating (DESIGN.md §5).  Runs long_500k via O(1) SSM state."""
+from repro.core.config import (BLOCK_MAMBA, BLOCK_SHARED_ATTN, Experiment,
+                               ModelConfig, TrainConfig)
+
+
+def get_config() -> Experiment:
+    unit = (BLOCK_MAMBA,) * 18 + (BLOCK_SHARED_ATTN,)
+    return Experiment(model=ModelConfig(
+        name="zamba2-1.2b", family="hybrid",
+        num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32,
+        d_ff=8192, vocab_size=32000, ssm_state=64,
+        block_unit=unit,
+    ), train=TrainConfig(optimizer="sgdm", microbatches=4))

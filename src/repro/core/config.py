@@ -1,0 +1,336 @@
+"""Central configuration system for the E2-Train framework.
+
+Everything in the framework is driven by three frozen dataclasses:
+
+* :class:`ModelConfig`   — architecture definition (family, dims, block pattern)
+* :class:`E2TrainConfig` — the paper's technique knobs (SMD / SLU / PSG)
+* :class:`TrainConfig` / :class:`ServeConfig` — run shapes and optimizer knobs
+
+plus :class:`MeshConfig` for distribution and an :class:`Experiment` bundle
+that ties them together.  ``repro.configs`` registers one Experiment factory
+per assigned architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+# Block kinds understood by models/transformer.py
+BLOCK_ATTN = "attn"              # self-attention + dense MLP
+BLOCK_MOE = "moe"                # self-attention + MoE FFN
+BLOCK_MAMBA = "mamba"            # Mamba2 SSM mixer + (optional) MLP
+BLOCK_MLSTM = "mlstm"            # xLSTM matrix-memory block
+BLOCK_SLSTM = "slstm"            # xLSTM scalar-memory block
+BLOCK_SHARED_ATTN = "shared_attn"  # zamba2-style weight-shared attention
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture definition.  All assigned archs reduce to this."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm | cnn
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    mlp_bias: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int = 0          # 0 -> full (causal) attention
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "silu"                # silu | gelu | relu
+    glu: bool = True                 # gated MLP (SwiGLU-style) if True
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim (0 -> d_ff)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # --- SSM / xLSTM ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    shared_attn_every: int = 0       # zamba2: invoke shared attn after every k blocks
+
+    # --- block pattern ---
+    # Repeating unit of block kinds; tiled to num_layers.  Empty -> inferred
+    # from family ("attn" for dense, "moe" for moe, ...).
+    block_unit: Tuple[str, ...] = ()
+
+    # --- encoder/decoder + multimodal frontends ---
+    encoder_layers: int = 0          # >0 -> enc-dec (whisper)
+    cross_attention: bool = False
+    frontend: str = ""               # "" | "audio" | "vision"   (stubs)
+    frontend_tokens: int = 0         # number of frontend embedding positions
+
+    # --- numerics ---
+    dtype: str = "bfloat16"          # activation dtype
+    param_dtype: str = "float32"
+
+    # ----- derived -----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def blocks(self) -> Tuple[str, ...]:
+        """Full per-layer block-kind tuple of length num_layers."""
+        unit = self.block_unit
+        if not unit:
+            unit = {
+                "moe": (BLOCK_MOE,),
+                "ssm": (BLOCK_MLSTM,),
+            }.get(self.family, (BLOCK_ATTN,))
+        reps = -(-self.num_layers // len(unit))
+        return (unit * reps)[: self.num_layers]
+
+    @property
+    def act_dtype(self) -> Any:
+        return jnp.dtype(self.dtype)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/head table size: vocab rounded up to a multiple of 128
+        so the vocab axis shards on any realistic model-axis size (Megatron-
+        style vocab padding; whisper's 51865 -> 51968).  Logits for the pad
+        ids are masked to -inf, so the *logical* vocab is unchanged.  Tiny
+        vocabs (<1024: smoke/test configs) are left unpadded."""
+        if self.vocab_size < 1024:
+            return self.vocab_size
+        return -(-self.vocab_size // 128) * 128
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Whether the arch defines a sub-quadratic long-context path."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, v = self.d_model, self.vocab_size
+        hd = self.resolved_head_dim
+        n = 0
+        n += v * d                                           # embed
+        if not self.tie_embeddings:
+            n += v * d                                       # lm head
+        for kind in self.blocks:
+            n += self._block_params(kind, d, hd)
+        if self.shared_attn_every:
+            n += self._attn_params(d, hd)
+        n += d                                               # final norm
+        if self.encoder_layers:
+            n += self.encoder_layers * self._block_params(BLOCK_ATTN, d, hd)
+            # cross-attention params in each decoder layer
+            n += self.num_layers * self._attn_params(d, hd)
+        return n
+
+    def _attn_params(self, d: int, hd: int) -> int:
+        q = d * self.num_heads * hd
+        kv = 2 * d * self.num_kv_heads * hd
+        o = self.num_heads * hd * d
+        b = (self.num_heads * hd + 2 * self.num_kv_heads * hd) if self.qkv_bias else 0
+        return q + kv + o + b + 2 * d   # + norms
+
+    def _mlp_params(self, d: int, dff: int) -> int:
+        m = 3 if self.glu else 2
+        return m * d * dff
+
+    def _block_params(self, kind: str, d: int, hd: int) -> int:
+        if kind == BLOCK_ATTN:
+            return self._attn_params(d, hd) + self._mlp_params(d, self.d_ff)
+        if kind == BLOCK_MOE:
+            dff = self.moe_d_ff or self.d_ff
+            routed = self.num_experts * self._mlp_params(d, dff)
+            shared = self.num_shared_experts * self._mlp_params(d, dff)
+            router = d * self.num_experts
+            return self._attn_params(d, hd) + routed + shared + router
+        if kind == BLOCK_MAMBA:
+            di = self.ssm_expand * d
+            # in_proj (x,z), conv, ssm params (A,dt,B,C heads), out_proj, norm
+            return 2 * d * di + self.ssm_conv_width * di + 2 * di * self.ssm_state + 2 * di + di * d + 2 * d
+        if kind in (BLOCK_MLSTM, BLOCK_SLSTM):
+            di = self.ssm_expand * d
+            # qkv + gates + out_proj (+ up/down ffn-ish projections)
+            return 2 * d * di + 3 * di * hd_or(di) + di * d + 2 * d
+        if kind == BLOCK_SHARED_ATTN:
+            return 0  # shared params counted once at top level
+        raise ValueError(kind)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, hd = self.d_model, self.resolved_head_dim
+        dff = self.moe_d_ff or self.d_ff
+        n = self.param_count()
+        for kind in self.blocks:
+            if kind == BLOCK_MOE:
+                inactive = (self.num_experts - self.top_k) * self._mlp_params(d, dff)
+                n -= inactive
+        return n
+
+
+def hd_or(x: int) -> int:   # tiny helper for mlstm param estimate
+    return max(x // 8, 1)
+
+
+# ---------------------------------------------------------------------------
+# E2-Train technique
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SMDConfig:
+    enabled: bool = False
+    drop_prob: float = 0.5            # paper default
+    # 'replacement' sampling interpretation: each step independently dropped
+
+
+@dataclass(frozen=True)
+class SLUConfig:
+    enabled: bool = False
+    alpha: float = 1e-3               # FLOPs-regularizer weight (Eq. 1)
+    gate_hidden: int = 10             # LSTM hidden dim (paper: 10)
+    gate_proj: int = 10               # pooled-feature projection dim (paper: 10)
+    min_keep_prob: float = 0.05       # numerical floor on gate output
+    target_skip: float = 0.0          # optional target ratio for reg normalization
+    never_skip_first_last: bool = True
+
+
+@dataclass(frozen=True)
+class PSGConfig:
+    enabled: bool = False
+    bits_x: int = 8                   # activation precision (paper: 8)
+    bits_g: int = 16                  # output-grad precision (paper: 16)
+    bits_x_msb: int = 4               # predictor activation MSBs (paper: 4)
+    bits_g_msb: int = 10              # predictor grad MSBs (paper: 10)
+    beta: float = 0.05                # adaptive threshold ratio (paper: 0.05)
+    swa: bool = True                  # stochastic weight averaging (paper uses SWA)
+    swa_start_frac: float = 0.5
+    majority_vote: bool = False       # beyond-paper: 1-bit sign all-reduce
+
+
+@dataclass(frozen=True)
+class E2TrainConfig:
+    smd: SMDConfig = field(default_factory=SMDConfig)
+    slu: SLUConfig = field(default_factory=SLUConfig)
+    psg: PSGConfig = field(default_factory=PSGConfig)
+
+    @classmethod
+    def full(cls) -> "E2TrainConfig":
+        return cls(
+            smd=SMDConfig(enabled=True),
+            slu=SLUConfig(enabled=True),
+            psg=PSGConfig(enabled=True),
+        )
+
+    @classmethod
+    def off(cls) -> "E2TrainConfig":
+        return cls()
+
+
+# ---------------------------------------------------------------------------
+# Run shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 256
+    seq_len: int = 4096
+    microbatches: int = 1             # gradient accumulation
+    lr: float = 0.1
+    schedule: str = "step"            # step | cosine | constant
+    warmup_steps: int = 0
+    total_steps: int = 64_000         # paper: 64k iterations
+    decay_points: Tuple[float, ...] = (0.5, 0.75)   # paper: 32k, 48k
+    decay_factor: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    optimizer: str = "sgdm"           # sgdm | signsgd | psg | adamw
+    grad_clip: float = 0.0
+    remat: str = "block"              # none | block | full
+    loss: str = "xent"
+    seed: int = 0
+    label_smoothing: float = 0.0
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 32
+    prefill_len: int = 32768
+    max_kv_len: int = 32768
+    decode_steps: int = 1
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+    # logical->physical rules, e.g. fsdp shards params over "data"
+    fsdp: bool = True
+    seq_shard: bool = False           # SP: shard sequence over model axis
+
+
+# ---------------------------------------------------------------------------
+# Experiment bundle + input shapes
+# ---------------------------------------------------------------------------
+
+# The four assigned shape cells (LM shapes are seq_len x global_batch).
+SHAPES: Mapping[str, Mapping[str, Any]] = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+@dataclass(frozen=True)
+class Experiment:
+    model: ModelConfig
+    e2: E2TrainConfig = field(default_factory=E2TrainConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+    serve: ServeConfig = field(default_factory=ServeConfig)
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+
+    def with_shape(self, shape: str) -> "Experiment":
+        s = SHAPES[shape]
+        if s["kind"] == "train":
+            return dataclasses.replace(
+                self, train=dataclasses.replace(
+                    self.train, seq_len=s["seq_len"], global_batch=s["global_batch"]))
+        return dataclasses.replace(
+            self, serve=dataclasses.replace(
+                self.serve, batch=s["global_batch"], prefill_len=s["seq_len"],
+                max_kv_len=s["seq_len"]))
+
+    def replace(self, **kw) -> "Experiment":
+        return dataclasses.replace(self, **kw)
+
+
+def shape_applicable(model: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """Whether a shape cell applies to an arch (per DESIGN.md §5)."""
+    if shape == "long_500k" and not model.is_subquadratic:
+        return False, "pure full-attention arch: no sub-quadratic 500k path (DESIGN.md §5)"
+    return True, ""

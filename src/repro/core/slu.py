@@ -1,0 +1,112 @@
+"""Model-level technique: input-dependent Selective Layer Update (SLU), §3.2.
+
+The paper attaches a tiny weight-shared RNN gate (GAP -> linear proj to 10
+-> LSTM(10) -> binary scalar) to every residual block; the gate decides per
+input whether the block is executed, for BOTH forward and backward, and a
+FLOPs regularizer ``alpha * C(W, G)`` (Eq. 1) drives the skip ratio up
+without any RL post-refinement.
+
+TPU adaptation (DESIGN.md §3.1): the decision is per-(block, step) rather
+than per-sample — the gate input is the batch-pooled block input, so every
+data-parallel replica reaches the same decision and collectives stay
+matched; the skip is a ``jax.lax.cond`` inside the scanned layer stack, so a
+skipped block contributes ~zero FLOPs at runtime.
+
+Gradient path: when a block executes, a straight-through factor
+``g_st = 1 + p - stop_grad(p)`` multiplies the residual branch so the task
+loss produces a gradient on the keep-probability; when skipped, the only
+gradient to the gate is from the FLOPs regularizer (pushing p down) — the
+same asymmetry the paper's hard-skipping induces.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.config import ModelConfig, SLUConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# gate network (shared across all blocks, carried through the layer scan)
+# ---------------------------------------------------------------------------
+
+
+def init_gate(key, cfg: ModelConfig, slu: SLUConfig) -> Params:
+    d, h = cfg.d_model, slu.gate_hidden
+    pj = slu.gate_proj
+    ks = jax.random.split(key, 4)
+    return {
+        "proj": dense_init(ks[0], (d, pj), jnp.float32),
+        "lstm_wx": dense_init(ks[1], (pj, 4 * h), jnp.float32),
+        "lstm_wh": dense_init(ks[2], (h, 4 * h), jnp.float32),
+        "lstm_b": jnp.zeros((4 * h,), jnp.float32),
+        "head_w": dense_init(ks[3], (h, 1), jnp.float32),
+        "head_b": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def init_gate_state(slu: SLUConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = slu.gate_hidden
+    return jnp.zeros((h,), jnp.float32), jnp.zeros((h,), jnp.float32)
+
+
+def gate_apply(gp: Params, x: jnp.ndarray, state, slu: SLUConfig):
+    """x: (B, S, d) block input -> (keep_prob scalar, new lstm state).
+
+    Pool over batch AND sequence (the per-minibatch adaptation): under pjit
+    the mean over the batch axis is a tiny all-reduce that XLA fuses.
+    """
+    pooled = jnp.mean(x.astype(jnp.float32), axis=tuple(range(x.ndim - 1)))
+    z = pooled @ gp["proj"]
+    h_prev, c_prev = state
+    g = z @ gp["lstm_wx"] + h_prev @ gp["lstm_wh"] + gp["lstm_b"]
+    i_t, f_t, o_t, u_t = jnp.split(g, 4)
+    c = jax.nn.sigmoid(f_t + 1.0) * c_prev + jax.nn.sigmoid(i_t) * jnp.tanh(u_t)
+    h = jax.nn.sigmoid(o_t) * jnp.tanh(c)
+    logit = (h @ gp["head_w"] + gp["head_b"])[0]
+    p = jnp.clip(jax.nn.sigmoid(logit), slu.min_keep_prob, 1.0)
+    return p, (h, c)
+
+
+# ---------------------------------------------------------------------------
+# gated residual execution
+# ---------------------------------------------------------------------------
+
+
+def gated_residual(block_fn: Callable[[jnp.ndarray], jnp.ndarray],
+                   x: jnp.ndarray,
+                   keep_prob: jnp.ndarray,
+                   rng: jnp.ndarray,
+                   force_keep) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Execute ``x + block(x)`` with probability keep_prob, else identity.
+
+    Returns (output, executed in {0.,1.}).  ``force_keep`` (bool scalar)
+    overrides the sample (first/last block, or eval mode).
+    """
+    keep = jax.random.bernoulli(rng, keep_prob) | force_keep
+    # straight-through: scale executed branch so d(out)/d(keep_prob) = block(x)
+    g_st = 1.0 + keep_prob - lax.stop_gradient(keep_prob)
+
+    def run(x):
+        return x + g_st.astype(x.dtype) * block_fn(x)
+
+    out = lax.cond(keep, run, lambda x: x, x)
+    return out, keep.astype(jnp.float32)
+
+
+def flops_regularizer(keep_probs: jnp.ndarray, block_flops: jnp.ndarray,
+                      slu: SLUConfig) -> jnp.ndarray:
+    """C(W, G) of Eq. 1: expected executed FLOPs, normalized to [0, 1]."""
+    total = jnp.sum(block_flops)
+    return jnp.sum(keep_probs * block_flops) / jnp.maximum(total, 1.0)
+
+
+def expected_compute_ratio(skip_ratio: float) -> float:
+    """Fraction of block compute executed at a given average skip ratio."""
+    return 1.0 - skip_ratio

@@ -1,0 +1,80 @@
+"""Data-level technique: Stochastic Mini-batch Dropping (SMD), paper §3.1.
+
+At each training step, the mini-batch is skipped with probability
+``drop_prob`` (paper default 0.5).  The decision is a *counter-based*
+deterministic function of ``(seed, step)`` so that in a multi-pod SPMD
+setting every host independently computes the same decision — no collective
+is needed to agree on a drop, which is what lets SMD double as straggler
+mitigation (DESIGN.md §7): a pod that would miss the step deadline declares
+the step dropped, and because SMD-style sampling-with-replacement is exactly
+what the training dynamics already tolerate, convergence is unaffected.
+
+``equivalent_steps`` maps a full-training iteration budget to the number of
+*executed* steps under SMD; the paper's adopted operating point is energy
+ratio 0.67 (i.e. SMD with 2x the nominal epochs costs 0.67x the energy but
+reaches higher accuracy than the standard protocol, Fig. 3a).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import SMDConfig
+
+
+def smd_keep(seed: int, step, drop_prob: float):
+    """Traceable keep-decision for step ``step`` (jnp scalar or int)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return jax.random.uniform(key) >= drop_prob
+
+
+def smd_keep_host(seed: int, step: int, drop_prob: float) -> bool:
+    """Host-side (non-traced) version: decides whether to even fetch data."""
+    return bool(np.asarray(smd_keep(seed, int(step), drop_prob)))
+
+
+def smd_schedule(cfg: SMDConfig, seed: int, total_steps: int) -> np.ndarray:
+    """Boolean keep-mask for a whole run (for logging / tests)."""
+    if not cfg.enabled:
+        return np.ones((total_steps,), bool)
+    return np.array([smd_keep_host(seed, t, cfg.drop_prob)
+                     for t in range(total_steps)])
+
+
+def expected_energy_ratio(cfg: SMDConfig, epochs_multiplier: float = 1.0) -> float:
+    """Energy of SMD training relative to standard training.
+
+    Running SMD for ``m x`` the nominal iterations costs ``m * (1 - p)``
+    of standard training's per-sample compute.  The paper's operating point
+    (Fig. 3a) is m=1.33, p=0.5 -> 0.67.
+    """
+    if not cfg.enabled:
+        return epochs_multiplier
+    return epochs_multiplier * (1.0 - cfg.drop_prob)
+
+
+class SMDIterator:
+    """Wrap a data iterator; yields (step, batch_or_None).
+
+    ``None`` means the step is dropped — the training loop must skip compute
+    *and data fetch* (the underlying iterator is not advanced), which is the
+    zero-overhead property the paper relies on.
+    """
+
+    def __init__(self, it, cfg: SMDConfig, seed: int, start_step: int = 0):
+        self._it = it
+        self._cfg = cfg
+        self._seed = seed
+        self._step = start_step
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        step = self._step
+        self._step += 1
+        if self._cfg.enabled and not smd_keep_host(self._seed, step,
+                                                   self._cfg.drop_prob):
+            return step, None
+        return step, next(self._it)

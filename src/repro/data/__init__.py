@@ -1,0 +1,3 @@
+from repro.data.synthetic import (MarkovLMTask, GaussianImageTask,
+                                  make_lm_batch, make_image_batch)
+from repro.data.pipeline import DataPipeline

@@ -1,0 +1,68 @@
+"""Host-side data pipeline: per-pod sharding, background prefetch, SMD.
+
+At scale each host generates/loads only its shard of the global batch (the
+synthetic generators are counter-based so shards never overlap).  A small
+background thread keeps ``prefetch`` batches ready; SMD drops are decided
+*before* generation, so a dropped step costs nothing — the zero-overhead
+property the paper's data-level technique relies on.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.core.config import SMDConfig
+from repro.core.smd import smd_keep_host
+
+
+class DataPipeline:
+    def __init__(self, make_batch: Callable[[int, int], Dict],
+                 smd: Optional[SMDConfig] = None,
+                 seed: int = 0, shard: int = 0,
+                 prefetch: int = 2, start_step: int = 0):
+        """make_batch(step, shard) -> batch dict."""
+        self._make = make_batch
+        self._smd = smd or SMDConfig()
+        self._seed = seed
+        self._shard = shard
+        self._step = start_step
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(prefetch, 1))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    def _producer(self):
+        step = self._step
+        while not self._stop.is_set():
+            if self._smd.enabled and not smd_keep_host(
+                    self._seed, step, self._smd.drop_prob):
+                item = (step, None)                 # SMD drop: no generation
+            else:
+                item = (step, self._make(step, self._shard))
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        while True:
+            item = self._q.get()
+            return item                             # (step, batch | None)
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,95 @@
+"""Deterministic synthetic datasets (DESIGN.md §6: no network access).
+
+Both tasks carry *learnable structure* so convergence-mechanism claims
+(SMD>=SMB, SLU>=SD, PSG~SignSGD) can be validated: loss decreases
+substantially iff training works, and the final loss separates methods.
+
+* ``MarkovLMTask`` — tokens follow a fixed random 1st-order Markov chain
+  (peaked transition per state + uniform noise floor).  The Bayes-optimal
+  cross-entropy is analytically known, so "accuracy" is measured as
+  next-token top-1 agreement with the chain's mode.
+* ``GaussianImageTask`` — class-conditional Gaussian images (CIFAR-shaped,
+  32x32x3, K classes) with controllable SNR.
+
+Every batch is a pure function of (seed, step, shard) — counter-based
+generation, no state — which is what makes SMD-dropped steps free and
+restarts/elastic resharding trivially deterministic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class MarkovLMTask:
+    vocab: int = 256
+    peak: float = 0.9           # prob of the designated next token
+    seed: int = 1234
+
+    def transition(self) -> np.ndarray:
+        rng = np.random.RandomState(self.seed)
+        return rng.permutation(self.vocab)
+
+    def bayes_xent(self) -> float:
+        p, v = self.peak, self.vocab
+        q = (1 - p) / (v - 1)
+        return float(-(p * np.log(p) + (v - 1) * q * np.log(q)))
+
+
+@partial(jax.jit, static_argnames=("task", "batch", "seq"))
+def make_lm_batch(task: MarkovLMTask, seed: int, step, shard,
+                  batch: int, seq: int) -> Dict[str, jnp.ndarray]:
+    key = jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(seed), step), shard)
+    perm = jnp.asarray(np.asarray(MarkovLMTask(
+        task.vocab, task.peak, task.seed).transition()))
+    k0, k1, k2 = jax.random.split(key, 3)
+    t0 = jax.random.randint(k0, (batch,), 0, task.vocab)
+    noise = jax.random.uniform(k1, (batch, seq)) > task.peak
+    rand_next = jax.random.randint(k2, (batch, seq), 0, task.vocab)
+
+    def step_fn(t, inp):
+        nz, rn = inp
+        nxt = jnp.where(nz, rn, perm[t])
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(step_fn, t0,
+                           (noise.T, rand_next.T))
+    toks = jnp.moveaxis(toks, 0, 1)                  # (B, seq)
+    tokens = toks[:, :-1] if seq > 1 else toks
+    labels = toks[:, 1:] if seq > 1 else toks
+    # pad back to seq for static shapes
+    tokens = jnp.pad(tokens, ((0, 0), (0, 1)))
+    labels = jnp.pad(labels, ((0, 0), (0, 1)), constant_values=-1)
+    return {"tokens": tokens, "labels": labels}
+
+
+@dataclass(frozen=True)
+class GaussianImageTask:
+    num_classes: int = 10
+    hw: int = 32
+    snr: float = 1.0
+    seed: int = 99
+
+    def means(self) -> np.ndarray:
+        rng = np.random.RandomState(self.seed)
+        return rng.randn(self.num_classes, self.hw, self.hw, 3).astype(np.float32)
+
+
+@partial(jax.jit, static_argnames=("task", "batch"))
+def make_image_batch(task: GaussianImageTask, seed: int, step, shard,
+                     batch: int) -> Dict[str, jnp.ndarray]:
+    key = jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(seed), step), shard)
+    k0, k1 = jax.random.split(key)
+    labels = jax.random.randint(k0, (batch,), 0, task.num_classes)
+    means = jnp.asarray(task.means())
+    noise = jax.random.normal(k1, (batch, task.hw, task.hw, 3))
+    images = task.snr * means[labels] + noise
+    return {"image": images, "label": labels}

@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (param_shardings, batch_sharding,
+                                        state_shardings, logical_rules)

@@ -1,0 +1,2 @@
+from repro.ft.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.ft.elastic import reshard_state

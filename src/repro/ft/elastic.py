@@ -1,0 +1,31 @@
+"""Elastic restart: reshard a checkpointed state onto a different mesh.
+
+Node loss at scale means restarting on a smaller (or differently shaped)
+mesh.  Because checkpoints are stored as full logical arrays + a manifest
+(ft/checkpoint.py) and shardings are *derived* from the rule table
+(distributed/sharding.py) rather than stored, resharding is just
+``jax.device_put`` with the new mesh's shardings — the rule engine's
+divisibility fallback guarantees a valid placement exists for any mesh.
+
+The batch contract also survives: the synthetic/counter-based data pipeline
+keys on (seed, step, shard), so a restart with a different number of data
+shards replays distinct, non-overlapping shards by construction.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.distributed.sharding import param_shardings, state_shardings
+
+
+def reshard_state(state: Any, new_mesh, fsdp: bool = True) -> Any:
+    """Place a (host-resident) TrainState onto a new mesh."""
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+        if hasattr(x, "shape") else x, state)
+    sh = state_shardings(shapes, new_mesh, fsdp=fsdp)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if hasattr(x, "shape") else x,
+        state, sh)

@@ -1,0 +1,70 @@
+"""jit'd wrappers over the Pallas kernels — the public kernel API.
+
+``psg_grad_w(x, gy, cfg)`` is the drop-in tile-level replacement for the
+element-level ``repro.core.psg.psg_grad_w_ref`` oracle; outputs are
+value-identical (the tile granularity only changes the *energy accounting*,
+reported via the returned fallback-tile ratio).
+
+On this CPU container kernels run with ``interpret=True`` (the kernel body
+executed in Python) — on a real TPU set ``REPRO_PALLAS_COMPILE=1`` to lower
+them through Mosaic.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import PSGConfig
+from repro.core.psg import qscale
+from repro.kernels import psg_matmul as _pm
+from repro.kernels import quant as _q
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def _codes(x: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Integer codes on the ``bits``-bit grid + the grid scale."""
+    s = qscale(x, bits)
+    lim = 2.0 ** (bits - 1) - 1.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -lim, lim)
+    dt = jnp.int8 if bits <= 8 else jnp.int16
+    return q.astype(dt), s
+
+
+@partial(jax.jit, static_argnames=("cfg", "interpret"))
+def psg_grad_w(x2: jnp.ndarray, gy2: jnp.ndarray, cfg: PSGConfig,
+               interpret: bool = INTERPRET
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Tile-level PSG weight gradient.
+
+    Returns (sign (din,dout) float32 in {-1,0,+1}, fallback_tile_ratio
+    scalar — the fraction of output tiles that needed the full product; the
+    energy model charges full-precision MACs only for those).
+    """
+    xm_c, xm_s = _codes(x2, cfg.bits_x_msb)
+    gm_c, gm_s = _codes(gy2, cfg.bits_g_msb)
+    xq_c, xq_s = _codes(x2, cfg.bits_x)
+    gq_c, gq_s = _codes(gy2, cfg.bits_g)
+    # threshold in *code units* of the predictor product:
+    # tau_real = beta * max|g_msb_real|; g_msb_real = codes * (xm_s * gm_s)
+    # -> tau_codes = beta * max|codes-product|
+    # we need max|g_msb| first: cheap jnp matmul on the narrow codes would
+    # defeat the kernel, so compute it from the kernel's own pass-1 product.
+    g_msb_codes = _pm.predictor_matmul_pallas(xm_c, gm_c, interpret=interpret)
+    tau_codes = cfg.beta * jnp.max(jnp.abs(g_msb_codes))
+    # rescale full-product codes so both accumulators share tau units:
+    # sign(g_full) is scale-invariant, so no rescale needed for the sign.
+    sign_i8, stats = _pm.psg_grad_w_pallas(
+        xm_c, gm_c, xq_c, gq_c, tau_codes, interpret=interpret)
+    fallback_ratio = jnp.mean(stats.astype(jnp.float32))
+    return sign_i8.astype(jnp.float32), fallback_ratio
+
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize(x: jnp.ndarray, bits: int, interpret: bool = INTERPRET
+             ) -> jnp.ndarray:
+    return _q.quantize_pallas(x, bits, interpret=interpret)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref.py`` contract).
+
+Every kernel in this package is validated against these references in
+``tests/test_kernels.py`` over a shape/dtype sweep.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import PSGConfig
+from repro.core.psg import msb_of, psg_grad_w_ref, quantize, quantize_int
+
+
+def quantize_ref(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Fake-quantization oracle (matches kernels/quant.py)."""
+    return quantize(x, bits)
+
+
+def psg_grad_w_oracle(x2: jnp.ndarray, gy2: jnp.ndarray, cfg: PSGConfig
+                      ) -> jnp.ndarray:
+    """Element-level Eq. (2) — identical semantics to the tile-level kernel:
+    a tile that is fully predictor-confident emits sign(g_msb) (== the
+    element-level choice for those entries); any other tile computes the full
+    product and uses it exactly where the element-level rule would."""
+    return psg_grad_w_ref(x2, gy2, cfg)
+
+
+def predictor_matmul_oracle(x2: jnp.ndarray, gy2: jnp.ndarray,
+                            cfg: PSGConfig) -> jnp.ndarray:
+    """The MSB predictor product g_msb = (x_msb)^T (gy_msb), fp32."""
+    xm = msb_of(x2, cfg.bits_x, cfg.bits_x_msb)
+    gm = msb_of(gy2, cfg.bits_g, cfg.bits_g_msb)
+    return xm.astype(jnp.float32).T @ gm.astype(jnp.float32)
+
+
+def flash_attention_oracle(q, gk, gv, causal: bool = True):
+    """Pure-jnp softmax attention (GQA), fp32 — oracle for flash_attn.py."""
+    import math
+    B, S, nh, hd = q.shape
+    T, nkv = gk.shape[1], gk.shape[2]
+    g = nh // nkv
+    qf = q.reshape(B, S, nkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bsngh,btnh->bnsgt", qf,
+                   gk.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        m = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(m[None, None, :, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnsgt,btnh->bsngh", w, gv.astype(jnp.float32))
+    return o.reshape(B, S, nh, hd)

@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture x input-shape) cell, builds the production mesh
+(single-pod 16x16 or multi-pod 2x16x16), lowers + compiles the real
+train_step / prefill / decode step with the real sharding rules, and
+records:
+
+* ``memory_analysis()``  — proves the cell fits per-device HBM,
+* ``cost_analysis()``    — HLO FLOPs / bytes for the roofline,
+* collective bytes       — parsed from the optimized HLO (all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute payloads),
+* the collective schedule summary.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3_8b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out results.json
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_experiment
+from repro.core.config import SHAPES, shape_applicable
+from repro.core.energy import (TPU_V5E, model_flops_6nd, model_fwd_flops,
+                               roofline_terms, train_step_flops)
+from repro.distributed import sharding as shd
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.serving.engine import make_decode_step, make_prefill_step
+from repro.training.train_step import make_train_step
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|s16|s8|u32|u8|pred|f64|s64)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2,
+          "f16": 2, "s16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, float]:
+    """Sum result-payload bytes of every collective op in the HLO text."""
+    out = {c: 0.0 for c in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo.splitlines():
+        s = line.strip()
+        # result type is at line start: '%name = TYPE op-name(...)'
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+(" + "|".join(COLLECTIVES)
+                     + r")\(", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        tbytes = 0.0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            tbytes += n * _BYTES[dt]
+        out[kind] += tbytes
+        out["count"] += 1
+    out["total"] = sum(out[c] for c in COLLECTIVES)
+    return out
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool):
+    """Lower + compile one cell; returns (compiled, lowered, exp)."""
+    exp = get_experiment(arch).with_shape(shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = SHAPES[shape]["kind"]
+    specs = sp.input_specs(exp, shape)
+
+    with mesh, shd.activation_sharding(mesh):
+        if kind == "train":
+            state_sh = shd.state_shardings(specs["state"], mesh, fsdp=exp.mesh.fsdp)
+            batch_sh = jax.tree.map(
+                lambda x: shd.batch_sharding(mesh, x.ndim, shape=x.shape),
+                specs["batch"])
+            fn = jax.jit(make_train_step(exp),
+                         in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,))
+            lowered = fn.lower(specs["state"], specs["batch"])
+        elif kind == "prefill":
+            param_sh = shd.param_shardings(specs["params"], mesh,
+                                           fsdp=exp.mesh.fsdp)
+            tok_sh = shd.batch_sharding(mesh, 2, shape=specs["tokens"].shape)
+            args = [specs["params"], specs["tokens"]]
+            shards = [param_sh, tok_sh]
+            if "frontend" in specs:
+                args.append(specs["frontend"])
+                shards.append(shd.batch_sharding(mesh, 3, shape=specs["frontend"].shape))
+            fn = jax.jit(make_prefill_step(exp), in_shardings=tuple(shards))
+            lowered = fn.lower(*args)
+        else:  # decode
+            param_sh = shd.param_shardings(specs["params"], mesh,
+                                           fsdp=exp.mesh.fsdp)
+            st_sh = shd.decode_state_shardings(specs["state"], mesh)
+            tok_sh = shd.batch_sharding(mesh, 2, shape=specs["token"].shape)
+            args = [specs["params"], specs["token"], specs["state"]]
+            shards = [param_sh, tok_sh, st_sh]
+            if "memory" in specs:
+                args.append(specs["memory"])
+                shards.append(shd.batch_sharding(mesh, 3, shape=specs["memory"].shape))
+            fn = jax.jit(make_decode_step(exp), in_shardings=tuple(shards),
+                         donate_argnums=(2,))
+            lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    return compiled, lowered, exp, mesh
+
+
+def analyze_cell(arch: str, shape: str, multi_pod: bool) -> Dict[str, Any]:
+    t0 = time.time()
+    exp = get_experiment(arch)
+    ok, why = shape_applicable(exp.model, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+    try:
+        compiled, lowered, exp, mesh = build_cell(arch, shape, multi_pod)
+    except Exception as e:  # noqa
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+    chips = mesh.size
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)          # body-once (reference)
+    from repro.launch.hlo_cost import analyze as hlo_analyze
+    loopcost = hlo_analyze(hlo)                    # loop-aware (authoritative)
+
+    kind = SHAPES[shape]["kind"]
+    scfg = exp.serve
+    if kind == "train":
+        B, S = exp.train.global_batch, exp.train.seq_len
+        mflops = model_flops_6nd(exp.model, B, S)
+        ana_flops = train_step_flops(exp.model, B, S)
+    elif kind == "prefill":
+        B, S = scfg.batch, scfg.prefill_len
+        mflops = model_flops_6nd(exp.model, B, S) / 3.0   # fwd only: 2ND
+        ana_flops = model_fwd_flops(exp.model, B, S)
+    else:
+        B, S = scfg.batch, 1
+        mflops = model_flops_6nd(exp.model, B, 1) / 3.0
+        ana_flops = model_fwd_flops(exp.model, B, 1, kv_len=scfg.max_kv_len)
+
+    # XLA's cost_analysis counts while bodies ONCE — useless for scan-based
+    # steps; the loop-aware analyzer (launch/hlo_cost.py) multiplies by trip
+    # counts.  Terms are per-device quantities (HLO is post-SPMD), so the
+    # roofline denominators use chips=1.
+    hlo_flops = loopcost["flops"]
+    hlo_bytes = loopcost["bytes"]
+    coll_bytes = loopcost["collective_bytes"]
+    terms = roofline_terms(hlo_flops, hlo_bytes, coll_bytes, 1)
+    mflops_dev = None
+    res = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "status": "ok",
+        "chips": chips,
+        "params": exp.model.param_count(),
+        "active_params": exp.model.active_param_count(),
+        "bytes_per_device": {
+            "argument": mem.argument_size_in_bytes,
+            "output": mem.output_size_in_bytes,
+            "temp": mem.temp_size_in_bytes,
+            "alias": mem.alias_size_in_bytes,
+            # donated inputs alias outputs; peak = args + temps + non-aliased out
+            "peak": mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes,
+        },
+        "hlo_flops_per_device": hlo_flops,
+        "hlo_bytes_per_device": hlo_bytes,
+        "collective_bytes_per_device": coll_bytes,
+        "xla_cost_analysis_flops_body_once": float(cost.get("flops", 0.0)),
+        "model_flops_6nd": mflops,
+        "analytic_flops": ana_flops,
+        # useful compute: MODEL_FLOPS per device / loop-aware HLO flops
+        "useful_ratio": (mflops / chips / hlo_flops) if hlo_flops else 0.0,
+        "collectives_body_once": coll,
+        "roofline": terms,
+        "compile_s": time.time() - t0,
+    }
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                r = analyze_cell(arch, shape, mp)
+                results.append(r)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    bl = r["roofline"]["bottleneck"]
+                    pk = r["bytes_per_device"]["peak"] / 2**30
+                    extra = (f"peak={pk:.2f}GiB step={r['roofline']['step_s']*1e3:.2f}ms "
+                             f"bound={bl} compile={r['compile_s']:.0f}s")
+                elif status == "error":
+                    extra = r["error"][:200]
+                else:
+                    extra = r["reason"][:80]
+                print(f"[{'2x16x16' if mp else '16x16'}] {arch:20s} {shape:12s} "
+                      f"{status:7s} {extra}", flush=True)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"done: {len(results)} cells, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,29 @@
+"""Production mesh construction (assignment §Multi-pod dry-run step 1).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state, so tests/benches that import the launcher still
+see the default single-device runtime.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests / elastic restarts."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes the global batch is sharded over ('pod' folds into data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def fsdp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

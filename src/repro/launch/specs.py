@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run step 2).
+
+Weak-type-correct, shardable, zero allocation — the shapes the production
+job would feed, for each of the four assigned shape cells.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import Experiment, ModelConfig, SHAPES
+from repro.models import transformer
+from repro.training import train_step as ts
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(exp: Experiment) -> Dict[str, Any]:
+    m, t = exp.model, exp.train
+    specs = {"tokens": sds((t.global_batch, t.seq_len), jnp.int32),
+             "labels": sds((t.global_batch, t.seq_len), jnp.int32)}
+    if m.frontend:
+        specs["frontend"] = sds((t.global_batch, m.frontend_tokens, m.d_model),
+                                m.act_dtype)
+    return specs
+
+
+def prefill_specs(exp: Experiment) -> Dict[str, Any]:
+    m, s = exp.model, exp.serve
+    specs = {"tokens": sds((s.batch, s.prefill_len), jnp.int32)}
+    if m.frontend:
+        specs["frontend"] = sds((s.batch, m.frontend_tokens, m.d_model),
+                                m.act_dtype)
+    return specs
+
+
+def decode_specs(exp: Experiment) -> Dict[str, Any]:
+    m, s = exp.model, exp.serve
+    state = jax.eval_shape(
+        lambda: transformer.init_decode_state(m, s.batch, s.max_kv_len))
+    specs = {"token": sds((s.batch, 1), jnp.int32), "state": state}
+    if m.encoder_layers:
+        specs["memory"] = sds((s.batch, m.frontend_tokens, m.d_model),
+                              m.act_dtype)
+    return specs
+
+
+def train_state_specs(exp: Experiment):
+    return jax.eval_shape(
+        lambda: ts.init_train_state(jax.random.PRNGKey(0), exp))
+
+
+def input_specs(exp: Experiment, shape: str) -> Dict[str, Any]:
+    """All inputs for a (arch x shape) dry-run cell."""
+    exp = exp.with_shape(shape)
+    kind = SHAPES[shape]["kind"]
+    if kind == "train":
+        return {"state": train_state_specs(exp),
+                "batch": train_batch_specs(exp)}
+    if kind == "prefill":
+        return {"params": train_state_specs(exp).params,
+                **prefill_specs(exp)}
+    return {"params": train_state_specs(exp).params, **decode_specs(exp)}

@@ -1,0 +1,1 @@
+"""Model zoo: assigned LM-family architectures + the paper's CNN backbones."""

@@ -1,0 +1,371 @@
+"""Core neural-net layers, pure-functional JAX.
+
+Conventions
+-----------
+* Every layer is a pair of functions ``init_<layer>(key, cfg, ...) -> params``
+  and ``<layer>(params, x, ...) -> y`` where ``params`` is a (nested) dict of
+  ``jnp.ndarray``.
+* Parameters are stored in ``cfg.param_dtype`` (fp32 by default) and cast to
+  ``cfg.dtype`` (bf16) inside apply — standard mixed-precision training.
+* Weight matrices are laid out ``(in_features, ..., out_features)`` so that
+  ``x @ w`` contracts the trailing input axis; this keeps TP sharding rules
+  uniform (shard the *output* axis of up-projections, the *input* axis of
+  down-projections).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import psg
+from repro.core.config import ModelConfig
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float = 1.0, mode: str = "fan_in"):
+    """LeCun/He-style truncated-normal init."""
+    fan_in = shape[0] if mode == "fan_in" else shape[-1]
+    std = scale / math.sqrt(max(fan_in, 1))
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.dtype(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, cfg: ModelConfig, eps: float = 1e-6):
+    """Statistics accumulate in fp32 via ``preferred_element_type`` reductions
+    so the (possibly scan-stacked) bf16 input is never upcast wholesale —
+    XLA hoists such converts out of while loops, materializing a full fp32
+    copy of the saved-residual stack."""
+    d = x.shape[-1]
+    if cfg.norm == "layernorm":
+        one = jnp.ones((d,), x.dtype)
+        mu = jnp.einsum("...d,d->...", x, one,
+                        preferred_element_type=jnp.float32)[..., None] / d
+        # var = E[x^2] - mu^2 (fp32 accumulation)
+        ms = jnp.einsum("...d,...d->...", x, x,
+                        preferred_element_type=jnp.float32)[..., None] / d
+        var = ms - mu * mu
+        inv = lax.rsqrt(var + eps)
+        w = (inv * p["scale"].astype(jnp.float32))
+        b = (p["bias"].astype(jnp.float32) - mu[..., 0:1] * w)
+        y = x * w.astype(x.dtype) + b.astype(x.dtype)
+    else:  # rmsnorm
+        ms = jnp.einsum("...d,...d->...", x, x,
+                        preferred_element_type=jnp.float32)[..., None] / d
+        inv = lax.rsqrt(ms + eps)
+        y = x * (inv * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional sliding window, causal, KV-cache decode)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.num_heads, cfg.num_kv_heads
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, nh, hd), pd),
+        "wk": dense_init(ks[1], (d, nkv, hd), pd),
+        "wv": dense_init(ks[2], (d, nkv, hd), pd),
+        "wo": dense_init(ks[3], (nh, hd, d), pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh, hd), pd)
+        p["bk"] = jnp.zeros((nkv, hd), pd)
+        p["bv"] = jnp.zeros((nkv, hd), pd)
+    return p
+
+
+def _qkv(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    dt = x.dtype
+    q = psg.einsum("bsd,dnh->bsnh", x, p["wq"].astype(dt))
+    k = psg.einsum("bsd,dnh->bsnh", x, p["wk"].astype(dt))
+    v = psg.einsum("bsd,dnh->bsnh", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return q, k, v
+
+
+@jax.custom_vjp
+def _softmax_lowp(scores: jnp.ndarray) -> jnp.ndarray:
+    """Row softmax with fp32 statistics but *bf16 probabilities* — the
+    probability tensor is the largest attention buffer (fwd residual AND
+    its gradient in bwd); storing it in bf16 halves the attention share of
+    the memory roofline term, with fp32-stable max/sum reductions."""
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    return (e / jnp.sum(e, axis=-1, keepdims=True)).astype(jnp.bfloat16)
+
+
+def _softmax_lowp_fwd(scores):
+    w = _softmax_lowp(scores)
+    return w, w
+
+
+def _softmax_lowp_bwd(w, g):
+    # ds = w * (g - sum(g * w)); the inner product accumulates fp32
+    gw = jnp.einsum("...t,...t->...", g, w,
+                    preferred_element_type=jnp.float32)[..., None]
+    ds = w.astype(jnp.float32) * (g.astype(jnp.float32) - gw)
+    return (ds,)
+
+
+_softmax_lowp.defvjp(_softmax_lowp_fwd, _softmax_lowp_bwd)
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q:(B,S,nh,hd) k/v:(B,T,nkv,hd) mask:(B,1,S,T) bool -> (B,S,nh,hd).
+
+    GQA: query heads are grouped over kv heads via reshape (no repeat).
+    """
+    B, S, nh, hd = q.shape
+    T, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    qf = q.reshape(B, S, nkv, g, hd)
+    # bf16 x bf16 -> fp32 accumulation on the MXU; upcasting k wholesale
+    # would materialize an fp32 copy of the (stacked) KV cache per decode
+    # step (XLA hoists the convert out of the unit loop).
+    scores = jnp.einsum("bsngh,btnh->bnsgt", qf, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    scores = jnp.where(mask[:, :, :, None, :] if mask.ndim == 4 else mask,
+                       scores, -1e30) if mask is not None else scores
+    w = _softmax_lowp(scores)
+    out = jnp.einsum("bnsgt,btnh->bsngh", w.astype(v.dtype), v)
+    return out.reshape(B, S, nh, hd)
+
+
+def causal_mask(S: int, T: int, offset: int = 0, window: int = 0) -> jnp.ndarray:
+    """(S,T) bool; query i attends key j iff j <= i+offset (and within window)."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m = m & (kj > qi - window)
+    return m
+
+
+ATTN_Q_CHUNK = 512          # query-chunked attention above this seq length
+ATTN_CHUNK_THRESHOLD = 8192
+
+
+def attention_fwd(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                  positions: Optional[jnp.ndarray] = None,
+                  causal: bool = True,
+                  prefer_chunked: bool = False,
+                  return_kv: bool = False):
+    """Full-sequence attention (training / prefill).
+
+    For long sequences (prefill_32k+) the S x S score tensor does not fit
+    HBM even sharded, so we stream query chunks against the full KV with a
+    ``lax.scan`` — O(S * chunk) live memory (flash-attention's memory
+    shape, adapted to TPU: the per-chunk matmuls stay MXU-sized and XLA
+    double-buffers the scan).
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    chunk = S > ATTN_CHUNK_THRESHOLD or (prefer_chunked and S >= 2 * ATTN_Q_CHUNK)
+    if causal and chunk:
+        out = _sdpa_qchunked(q, k, v, cfg)
+    else:
+        mask = causal_mask(S, S, 0, cfg.sliding_window)[None, None] if causal else None
+        out = _sdpa(q, k, v, mask, cfg)
+    y = psg.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def _sdpa_qchunked(q, k, v, cfg: ModelConfig):
+    """Causal attention, scanning over query chunks vs full KV.
+
+    Queries are padded up to a chunk multiple (VLM prefills prepend patch
+    tokens, e.g. 32768+576); padded rows attend causally past the end and
+    are sliced off."""
+    B, S, nh, hd = q.shape
+    L = ATTN_Q_CHUNK
+    pad = (-S) % L
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nch = Sp // L
+    qc = jnp.moveaxis(q.reshape(B, nch, L, nh, hd), 1, 0)     # (nch,B,L,nh,hd)
+
+    @jax.checkpoint   # bwd recomputes each chunk's scores (O(L*S) live)
+    def one_chunk(_, inp):
+        qi, ci = inp
+        offset = ci * L
+        mask = (jnp.arange(S)[None, :] <= (jnp.arange(L)[:, None] + offset))
+        if cfg.sliding_window > 0:
+            mask = mask & (jnp.arange(S)[None, :] >
+                           (jnp.arange(L)[:, None] + offset - cfg.sliding_window))
+        yi = _sdpa(qi, k, v, mask[None, None], cfg)
+        return None, yi
+
+    _, yc = lax.scan(one_chunk, None, (qc, jnp.arange(nch)))
+    out = jnp.moveaxis(yc, 0, 1).reshape(B, Sp, nh, hd)
+    return out[:, :S] if pad else out
+
+
+def attention_decode(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                     kv_cache: Tuple[jnp.ndarray, jnp.ndarray],
+                     cache_len: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple]:
+    """One-token decode. x:(B,1,d); kv_cache k/v:(B,T,nkv,hd); cache_len:(B,).
+
+    With sliding-window attention the cache is a ring buffer of size
+    ``min(T, window)`` — positions wrap; masking handles validity.
+    """
+    B = x.shape[0]
+    kc, vc = kv_cache
+    T = kc.shape[1]
+    pos = cache_len[:, None]                     # (B,1) absolute position
+    q, k, v = _qkv(p, x, cfg)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    slot = (cache_len % T)
+    kc = jax.vmap(lambda c, u, s: lax.dynamic_update_slice(c, u, (s, 0, 0)))(
+        kc, k.astype(kc.dtype), slot)
+    vc = jax.vmap(lambda c, u, s: lax.dynamic_update_slice(c, u, (s, 0, 0)))(
+        vc, v.astype(vc.dtype), slot)
+    # key j (ring index) valid iff its absolute position within [pos-window, pos]
+    idx = jnp.arange(T)[None, :]                  # ring indices
+    n_valid = jnp.minimum(cache_len + 1, T)[:, None]
+    # absolute position of ring slot j:
+    wraps = (cache_len[:, None] + 1) > T
+    abs_pos = jnp.where(wraps, cache_len[:, None] - ((slot[:, None] - idx) % T), idx)
+    valid = idx < n_valid
+    if cfg.sliding_window > 0:
+        valid = valid & (abs_pos > cache_len[:, None] - cfg.sliding_window)
+    mask = valid[:, None, None, :]                # (B,1,1,T)
+    out = _sdpa(q, kc, vc, mask, cfg).astype(x.dtype)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(x.dtype))
+    return y, (kc, vc)
+
+
+def fill_kv_cache(cfg: ModelConfig, k: jnp.ndarray, v: jnp.ndarray,
+                  max_len: int, dtype=jnp.bfloat16):
+    """Build decode ring buffers from prefill K/V (B, S, nkv, hd).
+
+    With sliding-window attention the cache holds the last ``window``
+    positions at slots ``abs % T`` — the layout ``attention_decode``'s
+    wrap-aware masking expects."""
+    B, S = k.shape[0], k.shape[1]
+    T = min(max_len, cfg.sliding_window) if cfg.sliding_window > 0 else max_len
+    kc, vc = init_kv_cache(cfg, B, max_len, dtype)
+    n = min(S, T)
+    idx_abs = jnp.arange(S - n, S)
+    slots = idx_abs % T
+    kc = kc.at[:, slots].set(k[:, idx_abs].astype(dtype))
+    vc = vc.at[:, slots].set(v[:, idx_abs].astype(dtype))
+    return kc, vc
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    T = min(max_len, cfg.sliding_window) if cfg.sliding_window > 0 else max_len
+    shape = (batch, T, cfg.num_kv_heads, cfg.resolved_head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention_fwd(p: Params, x: jnp.ndarray, memory: jnp.ndarray,
+                        cfg: ModelConfig) -> jnp.ndarray:
+    dt = x.dtype
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dnh->btnh", memory, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dnh->btnh", memory, p["wv"].astype(dt))
+    out = _sdpa(q, k, v, None, cfg)
+    return jnp.einsum("bsnh,nhd->bsd", out, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# MLP (optionally gated / GLU)
+# ---------------------------------------------------------------------------
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None,
+             d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, f), pd),
+         "w_down": dense_init(ks[1], (f, d), pd)}
+    if cfg.glu:
+        p["w_gate"] = dense_init(ks[2], (d, f), pd)
+    if cfg.mlp_bias:
+        p["b_up"] = jnp.zeros((f,), pd)
+        p["b_down"] = jnp.zeros((d,), pd)
+    return p
+
+
+def mlp_fwd(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = x.dtype
+    act = _ACTS[cfg.act]
+    up = psg.matmul(x, p["w_up"].astype(dt))
+    if cfg.mlp_bias:
+        up = up + p["b_up"].astype(dt)
+    h = act(up) * psg.matmul(x, p["w_gate"].astype(dt)) if cfg.glu else act(up)
+    y = psg.matmul(h, p["w_down"].astype(dt))
+    if cfg.mlp_bias:
+        y = y + p["b_down"].astype(dt)
+    return y

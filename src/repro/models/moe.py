@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN (GShard-style grouped dispatch/combine einsums).
+
+Design notes (TPU / SPMD):
+
+* **Groups.**  Tokens are processed in groups of ``GROUP_SIZE``; capacity is
+  per-group (``C = cf * k * n_g / E``), so the dispatch one-hot is
+  (G, n_g, E, C) — linear in tokens.  An un-grouped formulation has
+  ``C ∝ N`` and the one-hot grows quadratically (hundreds of GiB/device at
+  1M tokens); grouping is what makes the einsum MoE scale.
+* **Sharding.**  G follows the batch axis; when ``num_experts`` divides the
+  model axis the E axis is expert-parallel (XLA inserts the dispatch/combine
+  all-to-alls), otherwise the capacity axis shards over model (grok: 8
+  experts on a 16-way axis) with TP inside each expert.
+* Expert weights are stacked ``(E, d, f)``; shared experts (DeepSeekMoE)
+  are always-on dense MLPs; the router runs fp32 and never sees PSG (sign
+  updates break load-balance dynamics — DESIGN.md §5).
+* Tokens above capacity drop (combine weight 0) — standard GShard; with
+  ``capacity_factor >= 1`` and balanced routing nothing drops in tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import psg
+from repro.core.config import ModelConfig
+from repro.distributed.sharding import ctx_mesh_axis_size, hint
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+GROUP_SIZE = 1024
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.num_experts
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": layers.dense_init(ks[0], (d, E), jnp.float32),
+        "w_up": layers.dense_init(ks[1], (E, d, f), pd),
+        "w_gate": layers.dense_init(ks[2], (E, d, f), pd),
+        "w_down": layers.dense_init(ks[3], (E, f, d), pd),
+    }
+    if cfg.num_shared_experts:
+        sk = jax.random.split(ks[4], cfg.num_shared_experts)
+        p["shared"] = [layers.init_mlp(k, cfg, d_ff=f) for k in sk]
+    return p
+
+
+def moe_fwd(p: Params, x: jnp.ndarray, cfg: ModelConfig
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    dt = x.dtype
+    N = B * S
+    n_g = min(GROUP_SIZE, N)
+    G = N // n_g
+    assert G * n_g == N, f"tokens {N} not divisible by group {n_g}"
+    cap = max(int(cfg.capacity_factor * k * n_g / E), 1)
+
+    # EP when experts divide the model axis; otherwise leave E and C
+    # unsharded and let the weights' d_ff TP-sharding drive the expert
+    # matmuls (sharding C over model conflicts with the f axis and makes
+    # the partitioner all-gather the full expert weights — observed 12 GiB
+    # on grok prefill).
+    ep = E % max(ctx_mesh_axis_size("model"), 1) == 0
+    e_ax, c_ax = ("mlp", None) if ep else (None, None)
+
+    # groups shard over all of (pod, data, model): the flattened token axis
+    # absorbs both the batch sharding and (under SP) the sequence sharding.
+    xg = hint(x.reshape(G, n_g, d), "batch", None, None)
+    logits = (xg.astype(jnp.float32) @ p["router"])            # (G, n, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # --- top-k selection (renormalized weights) ---
+    topv, topi = jax.lax.top_k(probs, k)                       # (G, n, k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+    # --- per-group capacity positions ---
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.int32)          # (G, n, k, E)
+    flat = onehot.reshape(G, n_g * k, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(G, n_g, k, E)
+    pos = jnp.sum(pos * onehot, axis=-1)                       # (G, n, k)
+    keep = pos < cap
+
+    # --- dispatch/combine ---
+    disp = (jax.nn.one_hot(topi, E, dtype=dt)[..., None]
+            * jax.nn.one_hot(pos, cap, dtype=dt)[..., None, :]
+            * keep[..., None, None].astype(dt))                # (G, n, k, E, C)
+    comb = disp * topv[..., None, None].astype(dt)
+    disp_ec = hint(jnp.sum(disp, axis=2), "batch", None, e_ax, c_ax)
+    comb_ec = hint(jnp.sum(comb, axis=2), "batch", None, e_ax, c_ax)
+
+    # --- expert computation ---
+    ex_in = hint(jnp.einsum("gnec,gnd->gecd", disp_ec, xg),
+                 "batch", e_ax, c_ax, None)                    # (G, E, C, d)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(psg.einsum("gecd,edf->gecf", ex_in, p["w_up"].astype(dt)))
+    h = h * psg.einsum("gecd,edf->gecf", ex_in, p["w_gate"].astype(dt))
+    ex_out = hint(psg.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt)),
+                  "batch", e_ax, c_ax, None)
+    y = jnp.einsum("gnec,gecd->gnd", comb_ec, ex_out)          # (G, n, d)
+    y = y.reshape(N, d)
+
+    # --- shared experts ---
+    if cfg.num_shared_experts:
+        xt = x.reshape(N, d)
+        for sp in p["shared"]:
+            y = y + layers.mlp_fwd(sp, xt, cfg)
+
+    # --- load-balance aux loss (Switch-style, over all tokens) ---
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(topi[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    return y.reshape(B, S, d), aux.astype(jnp.float32)

@@ -1,0 +1,258 @@
+"""Paper-faithful CIFAR backbones: ResNet-74 / ResNet-110 / MobileNetV2.
+
+These are the models the paper actually trains (§4.1): CIFAR-style ResNets
+(6n+2 layers; n=12 -> 74, n=18 -> 110, [He et al. 2016]) and MobileNetV2
+scaled for 32x32 inputs.  E²-Train hooks are identical to the transformer
+path: SLU gates every residual block (the paper's granularity), PSG routes
+the conv-as-matmul weight gradients, SMD lives in the data pipeline.
+
+Convs are implemented as im2col + ``psg.matmul`` so the PSG custom-vjp (and
+later the Pallas kernel) applies to the conv backward exactly as the paper's
+Eq. (4) describes (``g_w`` as a sum of input x output-grad inner products).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import psg, slu
+from repro.core.config import E2TrainConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# conv via im2col (PSG-routable)
+# ---------------------------------------------------------------------------
+
+
+def init_conv(key, cin: int, cout: int, k: int = 3) -> Params:
+    return {"w": dense_init(key, (k * k * cin, cout), jnp.float32, scale=1.41)}
+
+
+def conv2d(p: Params, x: jnp.ndarray, k: int = 3, stride: int = 1) -> jnp.ndarray:
+    """x: (B, H, W, C) -> (B, H', W', cout) via im2col + matmul."""
+    B, H, W, C = x.shape
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    patches = lax.conv_general_dilated_patches(
+        xp, (k, k), (stride, stride), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    Ho, Wo = patches.shape[1], patches.shape[2]
+    y = psg.matmul(patches.reshape(B * Ho * Wo, k * k * C), p["w"])
+    return y.reshape(B, Ho, Wo, -1)
+
+
+def init_bn(c: int) -> Params:
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,)),
+            "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def batchnorm(p: Params, x: jnp.ndarray, train: bool = True):
+    if train:
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+    else:
+        mu, var = p["mean"], p["var"]
+    y = (x - mu) * lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# CIFAR ResNet (6n+2)
+# ---------------------------------------------------------------------------
+
+
+def resnet_depth_to_n(depth: int) -> int:
+    assert (depth - 2) % 6 == 0, "CIFAR ResNet depth must be 6n+2"
+    return (depth - 2) // 6
+
+
+def init_resnet(key, depth: int, num_classes: int = 10,
+                e2: Optional[E2TrainConfig] = None,
+                width: int = 16) -> Params:
+    n = resnet_depth_to_n(depth)
+    e2 = e2 or E2TrainConfig()
+    keys = jax.random.split(key, 3 * n * 2 + 5)
+    ki = iter(range(len(keys)))
+    p: Params = {"stem": init_conv(keys[next(ki)], 3, width),
+                 "stem_bn": init_bn(width), "blocks": [], "downs": []}
+    cin = width
+    for stage, cout in enumerate((width, 2 * width, 4 * width)):
+        for b in range(n):
+            blk = {"conv1": init_conv(keys[next(ki)], cin if b == 0 else cout, cout),
+                   "bn1": init_bn(cout),
+                   "conv2": init_conv(keys[next(ki)], cout, cout),
+                   "bn2": init_bn(cout)}
+            p["blocks"].append(blk)
+            if b == 0 and cin != cout:
+                p["downs"].append({"conv": init_conv(keys[next(ki)], cin, cout, k=1)})
+            elif b == 0:
+                p["downs"].append(None)
+            cin = cout
+    p["fc_w"] = dense_init(keys[next(ki)], (4 * width, num_classes), jnp.float32)
+    p["fc_b"] = jnp.zeros((num_classes,))
+    if e2.slu.enabled:
+        # gate operates on channel-pooled features; proj from max width
+        p["slu_gate"] = _init_cnn_gate(keys[next(ki)], 4 * width, e2.slu)
+    return p
+
+
+def _init_cnn_gate(key, cmax: int, slu_cfg) -> Params:
+    ks = jax.random.split(key, 4)
+    h, pj = slu_cfg.gate_hidden, slu_cfg.gate_proj
+    return {"proj": dense_init(ks[0], (cmax, pj), jnp.float32),
+            "lstm_wx": dense_init(ks[1], (pj, 4 * h), jnp.float32),
+            "lstm_wh": dense_init(ks[2], (h, 4 * h), jnp.float32),
+            "lstm_b": jnp.zeros((4 * h,), jnp.float32),
+            "head_w": dense_init(ks[3], (h, 1), jnp.float32),
+            "head_b": jnp.zeros((1,), jnp.float32)}
+
+
+def _cnn_gate_apply(gp: Params, x: jnp.ndarray, state, slu_cfg):
+    """Gate input = global-average-pooled features (paper Fig. 7)."""
+    pooled = jnp.mean(x.astype(jnp.float32), axis=(0, 1, 2))
+    cmax = gp["proj"].shape[0]
+    pooled = jnp.pad(pooled, (0, cmax - pooled.shape[0]))
+    z = pooled @ gp["proj"]
+    h_prev, c_prev = state
+    g = z @ gp["lstm_wx"] + h_prev @ gp["lstm_wh"] + gp["lstm_b"]
+    i_t, f_t, o_t, u_t = jnp.split(g, 4)
+    c = jax.nn.sigmoid(f_t + 1.0) * c_prev + jax.nn.sigmoid(i_t) * jnp.tanh(u_t)
+    h = jax.nn.sigmoid(o_t) * jnp.tanh(c)
+    logit = (h @ gp["head_w"] + gp["head_b"])[0]
+    pkeep = jnp.clip(jax.nn.sigmoid(logit), slu_cfg.min_keep_prob, 1.0)
+    return pkeep, (h, c)
+
+
+def resnet_fwd(p: Params, x: jnp.ndarray, depth: int,
+               e2: Optional[E2TrainConfig] = None,
+               rng: Optional[jnp.ndarray] = None,
+               train: bool = True) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, 32, 32, 3) -> (logits, aux{slu_cost, executed})."""
+    n = resnet_depth_to_n(depth)
+    e2 = e2 or E2TrainConfig()
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    slu_on = e2.slu.enabled and train and "slu_gate" in p
+
+    h = jax.nn.relu(batchnorm(p["stem_bn"], conv2d(p["stem"], x), train))
+    gst = (jnp.zeros((e2.slu.gate_hidden,)), jnp.zeros((e2.slu.gate_hidden,)))
+    kps, exs = [], []
+    bi = 0
+    n_blocks = 3 * n
+    for stage in range(3):
+        for b in range(n):
+            blk = p["blocks"][bi]
+            stride = 2 if (stage > 0 and b == 0) else 1
+            down = p["downs"][stage] if b == 0 else None
+
+            def block_fn(h, blk=blk, stride=stride, down=down):
+                y = jax.nn.relu(batchnorm(blk["bn1"],
+                                          conv2d(blk["conv1"], h, stride=stride),
+                                          train))
+                y = batchnorm(blk["bn2"], conv2d(blk["conv2"], y), train)
+                return y
+
+            shortcut = h
+            if down is not None:
+                shortcut = conv2d(down["conv"], h, k=1, stride=2 if stage > 0 else 1)
+            if slu_on and stride == 1 and down is None:
+                pkeep, gst = _cnn_gate_apply(p["slu_gate"], h, gst, e2.slu)
+                brng = jax.random.fold_in(rng, bi)
+                force = jnp.bool_(bi == 0 or bi == n_blocks - 1) \
+                    if e2.slu.never_skip_first_last else jnp.bool_(False)
+                keep = jax.random.bernoulli(brng, pkeep) | force
+                g_st = 1.0 + pkeep - lax.stop_gradient(pkeep)
+                h = lax.cond(keep,
+                             lambda h: h + g_st * block_fn(h),
+                             lambda h: h, h)
+                h = jax.nn.relu(h)
+                kps.append(pkeep); exs.append(keep.astype(jnp.float32))
+            else:
+                h = jax.nn.relu(shortcut + block_fn(h))
+                kps.append(jnp.float32(1.0)); exs.append(jnp.float32(1.0))
+            bi += 1
+    pooled = jnp.mean(h, axis=(1, 2))
+    logits = pooled @ p["fc_w"] + p["fc_b"]
+    kps_a = jnp.stack(kps)
+    aux = {"slu_cost": jnp.mean(kps_a) if slu_on else jnp.float32(1.0),
+           "slu_executed": jnp.stack(exs), "slu_keep_probs": kps_a}
+    return logits, aux
+
+
+def resnet_loss(p: Params, batch, depth: int, e2=None, rng=None):
+    e2 = e2 or E2TrainConfig()
+    logits, aux = resnet_fwd(p, batch["image"], depth, e2, rng)
+    labels = batch["label"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    total = nll + (e2.slu.alpha * aux["slu_cost"] if e2.slu.enabled else 0.0)
+    return total, {"loss": nll, "slu_cost": aux["slu_cost"],
+                   "slu_exec_ratio": jnp.mean(aux["slu_executed"])}
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2 (CIFAR variant)
+# ---------------------------------------------------------------------------
+
+MBV2_CFG = [  # (expansion, cout, blocks, stride)
+    (1, 16, 1, 1), (6, 24, 2, 1), (6, 32, 3, 2),
+    (6, 64, 4, 2), (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+
+
+def init_mobilenetv2(key, num_classes: int = 10) -> Params:
+    keys = jax.random.split(key, 64)
+    ki = iter(range(64))
+    p: Params = {"stem": init_conv(keys[next(ki)], 3, 32), "stem_bn": init_bn(32),
+                 "blocks": []}
+    cin = 32
+    for t, c, nblk, s in MBV2_CFG:
+        for b in range(nblk):
+            stride = s if b == 0 else 1
+            hidden = cin * t
+            blk = {"expand": init_conv(keys[next(ki)], cin, hidden, k=1),
+                   "bn1": init_bn(hidden),
+                   "dw": dense_init(keys[next(ki)], (3 * 3, hidden), jnp.float32),
+                   "bn2": init_bn(hidden),
+                   "project": init_conv(keys[next(ki)], hidden, c, k=1),
+                   "bn3": init_bn(c),
+                   "stride": stride, "residual": stride == 1 and cin == c}
+            p["blocks"].append(blk)
+            cin = c
+    p["head"] = init_conv(keys[next(ki)], cin, 1280, k=1)
+    p["head_bn"] = init_bn(1280)
+    p["fc_w"] = dense_init(keys[next(ki)], (1280, num_classes), jnp.float32)
+    p["fc_b"] = jnp.zeros((num_classes,))
+    return p
+
+
+def _depthwise(w: jnp.ndarray, x: jnp.ndarray, stride: int) -> jnp.ndarray:
+    B, H, W, C = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = []
+    for i in range(3):
+        for j in range(3):
+            cols.append(xp[:, i:i + H:1, j:j + W:1, :])
+    stack = jnp.stack(cols, axis=-2)                       # (B,H,W,9,C)
+    y = jnp.sum(stack * w[None, None, None], axis=-2)
+    if stride > 1:
+        y = y[:, ::stride, ::stride]
+    return y
+
+
+def mobilenetv2_fwd(p: Params, x: jnp.ndarray, train: bool = True):
+    h = jax.nn.relu6(batchnorm(p["stem_bn"], conv2d(p["stem"], x), train))
+    for blk in p["blocks"]:
+        inp = h
+        y = jax.nn.relu6(batchnorm(blk["bn1"], conv2d(blk["expand"], h, k=1), train))
+        y = jax.nn.relu6(batchnorm(blk["bn2"],
+                                   _depthwise(blk["dw"], y, blk["stride"]), train))
+        y = batchnorm(blk["bn3"], conv2d(blk["project"], y, k=1), train)
+        h = inp + y if blk["residual"] else y
+    h = jax.nn.relu6(batchnorm(p["head_bn"], conv2d(p["head"], h, k=1), train))
+    pooled = jnp.mean(h, axis=(1, 2))
+    return pooled @ p["fc_w"] + p["fc_b"]

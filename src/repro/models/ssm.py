@@ -1,0 +1,409 @@
+"""State-space / recurrent mixers: Mamba2 (SSD), mLSTM and sLSTM (xLSTM).
+
+TPU adaptation notes (DESIGN.md §3): the GPU reference implementations use
+fused CUDA selective-scan kernels.  On TPU we use the *chunked SSD* ("state
+space duality") formulation for Mamba2 — per-chunk quadratic matmuls (MXU
+friendly) plus a short ``lax.scan`` over chunks for the state carry — and the
+parallel quadratic form for mLSTM training.  Decode uses O(1) recurrent
+updates, which is the sub-quadratic long-context path for these families.
+
+Every mixer exposes:
+  init_<kind>(key, cfg) -> params
+  <kind>_fwd(params, x, cfg) -> y                      # full sequence
+  <kind>_step(params, x, state, cfg) -> (y, state)     # single-token decode
+  init_<kind>_state(cfg, batch, dtype) -> state
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.config import ModelConfig
+from repro.distributed.sharding import hint_batch
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+MAMBA_HEAD_DIM = 64
+SSD_CHUNK = 256
+
+
+def _mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    di = cfg.ssm_expand * cfg.d_model
+    nh = max(di // MAMBA_HEAD_DIM, 1)
+    hd = di // nh
+    return di, nh, hd
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (chunked SSD)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d, st = cfg.d_model, cfg.ssm_state
+    di, nh, hd = _mamba_dims(cfg)
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), pd),          # -> (x, z)
+        "conv": dense_init(ks[1], (cfg.ssm_conv_width, di), pd, scale=1.0),
+        "w_bc": dense_init(ks[2], (d, 2 * st), pd),          # -> (B, C)
+        "w_dt": dense_init(ks[3], (d, nh), pd),
+        "dt_bias": jnp.zeros((nh,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, float(nh), nh)).astype(pd),
+        "D": jnp.ones((nh,), pd),
+        "w_out": dense_init(ks[4], (di, d), pd),
+    }
+
+
+def _mamba_proj(p: Params, u: jnp.ndarray, cfg: ModelConfig):
+    """Shared projections. u:(B,S,d) -> x:(B,S,nh,hd), z, B, C, dt, A."""
+    dt_ = u.dtype
+    di, nh, hd = _mamba_dims(cfg)
+    xz = u @ p["w_in"].astype(dt_)
+    x, z = jnp.split(xz, 2, axis=-1)
+    bc = u @ p["w_bc"].astype(dt_)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                        # (B,S,st)
+    dt = jax.nn.softplus(u.astype(jnp.float32) @ p["w_dt"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (nh,) negative
+    return x, z, Bm, Cm, dt, A
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, buf: jnp.ndarray = None):
+    """Depthwise causal conv. x:(B,S,di), w:(W,di)."""
+    W = w.shape[0]
+    pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype) if buf is None else buf
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    return jax.nn.silu(out), xp[:, -(W - 1):]
+
+
+def mamba_fwd(p: Params, u: jnp.ndarray, cfg: ModelConfig,
+              return_state: bool = False):
+    """Chunked SSD: per-chunk quadratic matmuls + scan over chunks.
+    With ``return_state`` also returns the end-of-sequence recurrent state
+    (prefill -> decode handoff)."""
+    Bsz, S, d = u.shape
+    di, nh, hd = _mamba_dims(cfg)
+    st = cfg.ssm_state
+    L = min(SSD_CHUNK, S)
+    assert S % L == 0, f"seq {S} must be divisible by chunk {L}"
+    nchunk = S // L
+
+    x, z, Bm, Cm, dt, A = _mamba_proj(p, u, cfg)
+    x, conv_buf = _causal_conv(x, p["conv"])
+    xh = x.reshape(Bsz, S, nh, hd)
+
+    # per-step log decay: a_t = exp(A * dt_t); work in log space
+    loga = dt * A[None, None, :]                              # (B,S,nh) <= 0
+    # chunked views (scan over chunks — materializing all chunks' quadratic
+    # intermediates at once costs O(S*L*nh) fp32 per tensor, tens of GiB at
+    # 4k seq x 64 heads; the scan keeps one chunk's working set live)
+    xc = jnp.moveaxis(xh.reshape(Bsz, nchunk, L, nh, hd), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(Bsz, nchunk, L, st), 1, 0).astype(jnp.float32)
+    Cc = jnp.moveaxis(Cm.reshape(Bsz, nchunk, L, st), 1, 0).astype(jnp.float32)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nchunk, L, nh), 1, 0)
+    lac = jnp.moveaxis(loga.reshape(Bsz, nchunk, L, nh), 1, 0)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    adt = xh.dtype
+
+    @jax.checkpoint   # bwd recomputes the O(L^2) chunk tensors instead of
+    # saving them per chunk (x chunks x layers: tens of GiB otherwise)
+    def one_chunk(H, inp):
+        xn, Bn, Cn, dtn, lan = inp                # (B,L,...) one chunk
+        H = hint_batch(H)
+        s = jnp.cumsum(lan, axis=1)               # (B,L,nh) inclusive
+        # intra-chunk: M[i,j] = (C_i . B_j) exp(s_i - s_j) dt_j, j <= i
+        cb = jnp.einsum("bis,bjs->bij", Cn, Bn)   # (B,L,L)
+        gap = s[:, :, None, :] - s[:, None, :, :]           # (B,L,L,nh)
+        gap = jnp.where(tri[None, :, :, None], gap, -jnp.inf)
+        M = (cb[..., None] * jnp.exp(gap) * dtn[:, None, :, :]).astype(adt)
+        y = jnp.einsum("bijh,bjhd->bihd", M, xn)            # (B,L,nh,hd)
+        # inter-chunk: y_i += exp(s_i) * C_i @ H
+        y = y + jnp.einsum("bis,bhsd->bihd", Cn.astype(adt),
+                           H.astype(adt)) * jnp.exp(s)[..., None].astype(adt)
+        # state update: H' = exp(s_L) H + sum_j exp(s_L - s_j) dt_j B_j x_j
+        w_j = (jnp.exp(s[:, -1:, :] - s) * dtn).astype(adt)
+        Hc = jnp.einsum("bjh,bjs,bjhd->bhsd", w_j, Bn.astype(adt), xn)
+        H = H * jnp.exp(s[:, -1, :])[..., None, None].astype(H.dtype) \
+            + Hc.astype(H.dtype)
+        return H, y
+
+    H0 = jnp.zeros((Bsz, nh, st, hd), jnp.float32)
+    H_end, ys = lax.scan(one_chunk, H0, (xc, Bc, Cc, dtc, lac))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, nh, hd)
+    y = y + xh * p["D"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, di) * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(u.dtype)
+    if return_state:
+        return out, {"H": H_end.astype(jnp.float32),
+                     "conv_buf": conv_buf.astype(jnp.float32)}
+    return out
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    di, nh, hd = _mamba_dims(cfg)
+    return {
+        "H": jnp.zeros((batch, nh, cfg.ssm_state, hd), dtype),
+        "conv_buf": jnp.zeros((batch, cfg.ssm_conv_width - 1, di), dtype),
+    }
+
+
+def mamba_step(p: Params, u: jnp.ndarray, state: Params, cfg: ModelConfig):
+    """u:(B,1,d) single-token recurrent update."""
+    Bsz = u.shape[0]
+    di, nh, hd = _mamba_dims(cfg)
+    x, z, Bm, Cm, dt, A = _mamba_proj(p, u, cfg)
+    x, buf = _causal_conv(x, p["conv"], state["conv_buf"].astype(x.dtype))
+    xh = x.reshape(Bsz, nh, hd)
+    a = jnp.exp(dt[:, 0] * A[None, :])                        # (B,nh)
+    H = state["H"]
+    upd = jnp.einsum("bh,bs,bhd->bhsd", dt[:, 0].astype(H.dtype),
+                     Bm[:, 0].astype(H.dtype), xh.astype(H.dtype))
+    H = H * a[..., None, None].astype(H.dtype) + upd
+    y = jnp.einsum("bs,bhsd->bhd", Cm[:, 0].astype(H.dtype), H)
+    y = y + xh.astype(H.dtype) * p["D"].astype(H.dtype)[None, :, None]
+    y = (y.reshape(Bsz, 1, di).astype(u.dtype)) * jax.nn.silu(z)
+    return y @ p["w_out"].astype(u.dtype), {"H": H, "conv_buf": buf.astype(state["conv_buf"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block) — parallel quadratic train form
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    di = cfg.ssm_expand * cfg.d_model
+    nh = cfg.num_heads
+    hd = di // nh
+    return di, nh, hd
+
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di, nh, hd = _mlstm_dims(cfg)
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), pd),           # (x, z)
+        "wq": dense_init(ks[1], (di, nh, hd), pd),
+        "wk": dense_init(ks[2], (di, nh, hd), pd),
+        "wv": dense_init(ks[3], (di, nh, hd), pd),
+        "w_if": dense_init(ks[4], (di, 2 * nh), pd),          # input/forget gate logits
+        "b_if": jnp.concatenate([jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]).astype(pd),
+        "w_out": dense_init(ks[5], (di, d), pd),
+    }
+
+
+def _mlstm_gates(p, xi):
+    g = xi.astype(jnp.float32) @ p["w_if"].astype(jnp.float32) + p["b_if"].astype(jnp.float32)
+    i_t, f_t = jnp.split(g, 2, axis=-1)
+    logf = jax.nn.log_sigmoid(f_t)
+    return i_t, logf
+
+
+MLSTM_CHUNK = 256
+
+
+def mlstm_fwd(p: Params, u: jnp.ndarray, cfg: ModelConfig,
+              return_state: bool = False):
+    """Chunkwise-parallel mLSTM (xLSTM): per-chunk quadratic matmuls +
+    a scan carrying the stabilized matrix memory (C, n, m) across chunks —
+    O(S * chunk) memory instead of the O(S^2) fully-parallel form.
+    ``return_state`` also returns the end state for decode handoff.
+
+    NOTE state convention: the chunk scan stores C as (k-dim, v-dim) which
+    matches ``mlstm_step``'s layout."""
+    Bsz, S, d = u.shape
+    di, nh, hd = _mlstm_dims(cfg)
+    dt_ = u.dtype
+    L = min(MLSTM_CHUNK, S)
+    assert S % L == 0, f"seq {S} must be divisible by chunk {L}"
+    nch = S // L
+
+    xz = u @ p["w_in"].astype(dt_)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = jnp.einsum("bsd,dnh->bsnh", xi, p["wq"].astype(dt_)) / math.sqrt(hd)
+    k = jnp.einsum("bsd,dnh->bsnh", xi, p["wk"].astype(dt_))
+    v = jnp.einsum("bsd,dnh->bsnh", xi, p["wv"].astype(dt_))
+    i_t, logf = _mlstm_gates(p, xi)                           # (B,S,nh) fp32
+
+    def chunkify(t):
+        return jnp.moveaxis(t.reshape(Bsz, nch, L, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc = chunkify(q), chunkify(k), chunkify(v)        # (nch,B,L,nh,*)
+    ic, fc = chunkify(i_t), chunkify(logf)
+
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    @jax.checkpoint   # same O(L^2)-residual argument as the Mamba2 scan
+    def one_chunk(carry, inp):
+        C_in, n_in, m_in = carry                              # (B,nh,hd,hd),(B,nh,hd),(B,nh)
+        C_in = hint_batch(C_in)
+        qi, ki, vi, ii, fi = inp
+        qi, ki, vi = hint_batch(qi), hint_batch(ki), hint_batch(vi)
+        F = jnp.cumsum(fi, axis=1)                            # (B,L,nh)
+        # log-weights: inter = F_i + m_in ; intra[i,j] = F_i - F_j + i_j
+        inter_lw = F + m_in[:, None, :]
+        intra_lw = (F[:, :, None, :] - F[:, None, :, :] + ii[:, None, :, :])
+        intra_lw = jnp.where(tri[None, :, :, None], intra_lw, -jnp.inf)
+        m_i = jnp.maximum(inter_lw, jnp.max(intra_lw, axis=2))  # (B,L,nh)
+        Dm = jnp.exp(intra_lw - m_i[:, :, None, :])           # (B,L,L,nh)
+        wq_inter = jnp.exp(inter_lw - m_i)                    # (B,L,nh)
+
+        qf = qi.astype(jnp.float32)
+        kf = ki.astype(jnp.float32)
+        vf = vi.astype(jnp.float32)
+        qk = jnp.einsum("blnh,bjnh->bljn", qf, kf)
+        Wm = qk * Dm                                          # (B,L,L,nh)
+        # y_num[i] = sum_j Wm[i,j] v_j + (q_i . C_in) * w_inter[i]
+        y_num = jnp.einsum("bljn,bjnh->blnh", Wm, vf) \
+            + jnp.einsum("blng,bngh->blnh", qf, C_in) * wq_inter[..., None]
+        # normalizer vector: n_vec[i] = sum_j Dm[i,j] k_j + n_in * w_inter[i]
+        n_vec = jnp.einsum("bljn,bjng->blng", Dm, kf) \
+            + n_in[:, None, :, :] * wq_inter[..., None]
+        den = jnp.abs(jnp.einsum("blng,blng->bln", qf, n_vec))
+        den = jnp.maximum(den, jnp.exp(-m_i))
+        y = (y_num / den[..., None]).astype(dt_)              # (B,L,nh,hd)
+
+        # ---- state update at chunk end ----
+        F_L = F[:, -1, :]                                     # (B,nh)
+        st_lw = F_L[:, None, :] - F + ii                      # (B,L,nh) weight of token j
+        m_out = jnp.maximum(m_in + F_L, jnp.max(st_lw, axis=1))
+        w_st = jnp.exp(st_lw - m_out[:, None, :])             # (B,L,nh)
+        decay = jnp.exp(m_in + F_L - m_out)                   # (B,nh)
+        C_out = C_in * decay[..., None, None] + jnp.einsum(
+            "blng,blnh,bln->bngh", ki.astype(jnp.float32),
+            vi.astype(jnp.float32), w_st)
+        n_out = n_in * decay[..., None] + jnp.einsum(
+            "blng,bln->bng", ki.astype(jnp.float32), w_st)
+        return (C_out, n_out, m_out), y
+
+    C0 = jnp.zeros((Bsz, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((Bsz, nh, hd), jnp.float32)
+    m0 = jnp.full((Bsz, nh), -1e30, jnp.float32)
+    (C_end, n_end, m_end), ys = lax.scan(one_chunk, (C0, n0, m0),
+                                         (qc, kc, vc, ic, fc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, di)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(dt_)
+    if return_state:
+        return out, {"C": C_end, "n": n_end, "m": m_end}
+    return out
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    di, nh, hd = _mlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, nh, hd, hd), dtype),
+            "n": jnp.zeros((batch, nh, hd), dtype),
+            "m": jnp.full((batch, nh), -1e30, dtype)}
+
+
+def mlstm_step(p: Params, u: jnp.ndarray, state: Params, cfg: ModelConfig):
+    Bsz = u.shape[0]
+    di, nh, hd = _mlstm_dims(cfg)
+    dt_ = u.dtype
+    xz = u @ p["w_in"].astype(dt_)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = jnp.einsum("bd,dnh->bnh", xi[:, 0], p["wq"].astype(dt_)) / math.sqrt(hd)
+    k = jnp.einsum("bd,dnh->bnh", xi[:, 0], p["wk"].astype(dt_))
+    v = jnp.einsum("bd,dnh->bnh", xi[:, 0], p["wv"].astype(dt_))
+    i_t, logf = _mlstm_gates(p, xi[:, 0])                     # (B,nh)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(logf + m, i_t)
+    fp = jnp.exp(logf + m - m_new)
+    ip = jnp.exp(i_t - m_new)
+    # C is (B, nh, hd_k, hd_v): C += i' * k (outer) v
+    C = C * fp[..., None, None] + ip[..., None, None] * jnp.einsum(
+        "bng,bnh->bngh", k.astype(C.dtype), v.astype(C.dtype))
+    n = n * fp[..., None] + ip[..., None] * k.astype(n.dtype)
+    num = jnp.einsum("bngh,bng->bnh", C, q.astype(C.dtype))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bng,bng->bn", n, q.astype(n.dtype))),
+                      jnp.exp(-m_new))[..., None]
+    y = (num / den).reshape(Bsz, 1, di).astype(dt_) * jax.nn.silu(z)
+    return y @ p["w_out"].astype(dt_), {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory block) — sequential scan
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_g": dense_init(ks[0], (d, 4 * d), pd),             # z,i,f,o pre-acts
+        "r_g": dense_init(ks[1], (nh, hd, 4 * hd), pd),       # block-diag recurrent
+        "b_g": jnp.zeros((4 * d,), pd),
+        "w_out": dense_init(ks[2], (d, d), pd),
+    }
+
+
+def _slstm_cell(p, cfg, x_g, carry):
+    """x_g: (B, 4d) input pre-activation; carry: (c, n, h, m) each (B,nh,hd)."""
+    nh = cfg.num_heads
+    hd = cfg.d_model // nh
+    c, n, h, m = carry
+    rec = jnp.einsum("bnh,nhg->bng", h, p["r_g"].astype(h.dtype))  # (B,nh,4hd)
+    g = x_g.reshape(x_g.shape[0], nh, 4 * hd) + rec
+    z, i_t, f_t, o = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + m, i_t)
+    ip = jnp.exp(i_t - m_new)
+    fp = jnp.exp(logf + m - m_new)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h.astype(x_g.dtype), m_new)
+
+
+def slstm_fwd(p: Params, u: jnp.ndarray, cfg: ModelConfig,
+              return_state: bool = False):
+    Bsz, S, d = u.shape
+    nh = cfg.num_heads
+    hd = d // nh
+    x_g = u @ p["w_g"].astype(u.dtype) + p["b_g"].astype(u.dtype)  # (B,S,4d)
+
+    def step(carry, xg):
+        carry = tuple(hint_batch(c) for c in carry)
+        carry = _slstm_cell(p, cfg, xg, carry)
+        return carry, carry[2]
+
+    f32 = jnp.float32
+    init = (jnp.zeros((Bsz, nh, hd), f32), jnp.zeros((Bsz, nh, hd), f32),
+            jnp.zeros((Bsz, nh, hd), u.dtype), jnp.full((Bsz, nh, hd), -1e30, f32))
+    (c_e, n_e, h_e, m_e), hs = lax.scan(step, init, jnp.moveaxis(x_g, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(Bsz, S, d)
+    out = y @ p["w_out"].astype(u.dtype)
+    if return_state:
+        return out, {"c": c_e, "n": n_e, "h": h_e, "m": m_e}
+    return out
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    nh = cfg.num_heads
+    hd = cfg.d_model // nh
+    return {"c": jnp.zeros((batch, nh, hd), dtype),
+            "n": jnp.zeros((batch, nh, hd), dtype),
+            "h": jnp.zeros((batch, nh, hd), dtype),
+            "m": jnp.full((batch, nh, hd), -1e30, dtype)}
+
+
+def slstm_step(p: Params, u: jnp.ndarray, state, cfg: ModelConfig):
+    x_g = u[:, 0] @ p["w_g"].astype(u.dtype) + p["b_g"].astype(u.dtype)
+    carry = (state["c"], state["n"], state["h"].astype(u.dtype), state["m"])
+    c, n, h, m = _slstm_cell(p, cfg, x_g, carry)
+    y = h.reshape(u.shape[0], 1, cfg.d_model) @ p["w_out"].astype(u.dtype)
+    return y, {"c": c, "n": n, "h": h, "m": m}

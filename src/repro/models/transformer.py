@@ -1,0 +1,571 @@
+"""Generic LM stack: every assigned architecture is an instance of this.
+
+Key structural choices (DESIGN.md §4/§7):
+
+* **Scan over repeating units.**  ``cfg.blocks`` tiles a ``block_unit`` of
+  heterogeneous block kinds; parameters for each unit are stacked on a
+  leading axis and the stack is executed with ``jax.lax.scan`` — this keeps
+  the HLO size O(unit) instead of O(layers) (compile time at 512 devices)
+  and is what makes per-layer FSDP all-gather prefetching schedulable.
+* **SLU hooks.**  When ``e2.slu.enabled``, every residual sub-block is
+  wrapped in ``slu.gated_residual`` with the weight-shared RNN gate carried
+  through the scan; the regularizer inputs (keep-probs, analytic block
+  FLOPs) are returned in ``aux``.
+* **Decode.**  ``decode_step`` runs one token against per-layer state
+  (KV cache ring buffers for attention kinds, recurrent states for
+  SSM/xLSTM kinds) — the state pytree is stacked along units like params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import psg, slu
+from repro.core.config import (BLOCK_ATTN, BLOCK_MAMBA, BLOCK_MLSTM,
+                               BLOCK_MOE, BLOCK_SHARED_ATTN, BLOCK_SLSTM,
+                               E2TrainConfig, ModelConfig, SLUConfig)
+from repro.core.energy import block_fwd_flops
+from repro.distributed.sharding import hint, hint_batch
+from repro.models import layers, moe, ssm
+from repro.models.layers import (apply_norm, attention_decode, attention_fwd,
+                                 cross_attention_fwd, embed_init, init_attention,
+                                 init_kv_cache, init_mlp, init_norm, mlp_fwd)
+
+Params = Dict[str, Any]
+
+
+class LMOutput(NamedTuple):
+    logits: jnp.ndarray
+    aux_loss: jnp.ndarray          # MoE load-balance loss
+    slu_cost: jnp.ndarray          # expected executed-FLOPs fraction (C in Eq.1)
+    slu_executed: jnp.ndarray      # per-(unit, sub-block) executed flags
+    slu_keep_probs: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, kind: str, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    if kind == BLOCK_ATTN:
+        return {"ln1": init_norm(cfg), "attn": init_attention(ks[0], cfg),
+                "ln2": init_norm(cfg), "mlp": init_mlp(ks[1], cfg)}
+    if kind == BLOCK_MOE:
+        return {"ln1": init_norm(cfg), "attn": init_attention(ks[0], cfg),
+                "ln2": init_norm(cfg), "moe": moe.init_moe(ks[1], cfg)}
+    if kind == BLOCK_MAMBA:
+        return {"ln1": init_norm(cfg), "mamba": ssm.init_mamba(ks[0], cfg)}
+    if kind == BLOCK_MLSTM:
+        return {"ln1": init_norm(cfg), "mlstm": ssm.init_mlstm(ks[0], cfg)}
+    if kind == BLOCK_SLSTM:
+        return {"ln1": init_norm(cfg), "slstm": ssm.init_slstm(ks[0], cfg)}
+    if kind == BLOCK_SHARED_ATTN:
+        return {}            # weight-shared params live at top level
+    raise ValueError(kind)
+
+
+def _sub_blocks(kind: str):
+    """Residual sub-blocks per kind — the SLU gating granularity."""
+    if kind in (BLOCK_ATTN, BLOCK_MOE, BLOCK_SHARED_ATTN):
+        return ("mixer", "ffn") if kind != BLOCK_SHARED_ATTN else ("mixer",)
+    return ("mixer",)
+
+
+def block_apply(bp: Params, shared: Params, kind: str, x: jnp.ndarray,
+                cfg: ModelConfig, e2: E2TrainConfig, gate_ctx,
+                rng, force_keep,
+                prefer_chunked_attn: bool = False
+                ) -> Tuple[jnp.ndarray, Dict[str, Any], Any]:
+    """One block (train / prefill).  gate_ctx = (gate_params, lstm_state) or None."""
+    aux = jnp.zeros((), jnp.float32)
+    kps, execs = [], []
+
+    def gated(fn, x, sub_rng):
+        nonlocal gate_ctx
+        if gate_ctx is None:
+            return x + fn(x), jnp.float32(1.0), jnp.float32(1.0)
+        gp, gst = gate_ctx
+        p_keep, gst = slu.gate_apply(gp, x, gst, e2.slu)
+        gate_ctx = (gp, gst)
+        out, ex = slu.gated_residual(fn, x, p_keep, sub_rng, force_keep)
+        return out, p_keep, ex
+
+    r1, r2 = jax.random.split(rng)
+    if kind in (BLOCK_ATTN, BLOCK_MOE):
+        x, kp, ex = gated(lambda h: attention_fwd(
+            bp["attn"], apply_norm(bp["ln1"], h, cfg), cfg,
+            prefer_chunked=prefer_chunked_attn), x, r1)
+        kps.append(kp); execs.append(ex)
+        if kind == BLOCK_ATTN:
+            x, kp, ex = gated(lambda h: mlp_fwd(bp["mlp"],
+                                                apply_norm(bp["ln2"], h, cfg),
+                                                cfg), x, r2)
+        else:
+            # aux loss must flow even under lax.cond: compute the MoE branch's
+            # aux inside the cond via a (delta, aux) pair.
+            def moe_block(h):
+                y, a = moe.moe_fwd(bp["moe"], apply_norm(bp["ln2"], h, cfg), cfg)
+                return y, a
+
+            if gate_ctx is None:
+                y, a = moe_block(x)
+                x = x + y
+                aux = aux + a
+                kp, ex = jnp.float32(1.0), jnp.float32(1.0)
+            else:
+                gp, gst = gate_ctx
+                p_keep, gst = slu.gate_apply(gp, x, gst, e2.slu)
+                gate_ctx = (gp, gst)
+                keep = jax.random.bernoulli(r2, p_keep) | force_keep
+                g_st = 1.0 + p_keep - lax.stop_gradient(p_keep)
+
+                def run(h):
+                    y, a = moe_block(h)
+                    return h + g_st.astype(h.dtype) * y, a
+
+                x, a = lax.cond(keep, run,
+                                lambda h: (h, jnp.zeros((), jnp.float32)), x)
+                aux = aux + a
+                kp, ex = p_keep, keep.astype(jnp.float32)
+        kps.append(kp); execs.append(ex)
+    elif kind == BLOCK_MAMBA:
+        x, kp, ex = gated(lambda h: ssm.mamba_fwd(bp["mamba"],
+                                                  apply_norm(bp["ln1"], h, cfg),
+                                                  cfg), x, r1)
+        kps.append(kp); execs.append(ex)
+    elif kind == BLOCK_MLSTM:
+        x, kp, ex = gated(lambda h: ssm.mlstm_fwd(bp["mlstm"],
+                                                  apply_norm(bp["ln1"], h, cfg),
+                                                  cfg), x, r1)
+        kps.append(kp); execs.append(ex)
+    elif kind == BLOCK_SLSTM:
+        x, kp, ex = gated(lambda h: ssm.slstm_fwd(bp["slstm"],
+                                                  apply_norm(bp["ln1"], h, cfg),
+                                                  cfg), x, r1)
+        kps.append(kp); execs.append(ex)
+    elif kind == BLOCK_SHARED_ATTN:
+        # zamba2 weight-shared attention: never SLU-gated (DESIGN.md §5)
+        x = x + attention_fwd(shared["attn"],
+                              apply_norm(shared["ln"], x, cfg), cfg,
+                              prefer_chunked=prefer_chunked_attn)
+        kps.append(jnp.float32(1.0)); execs.append(jnp.float32(1.0))
+    else:
+        raise ValueError(kind)
+    return x, {"aux": aux, "kp": jnp.stack(kps), "ex": jnp.stack(execs)}, gate_ctx
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ModelConfig, e2: Optional[E2TrainConfig] = None) -> Params:
+    e2 = e2 or E2TrainConfig()
+    unit = cfg.blocks[: len(cfg.block_unit) or 1]
+    if not cfg.block_unit:
+        unit = (cfg.blocks[0],)
+    n_units = cfg.num_layers // len(unit)
+    assert n_units * len(unit) == cfg.num_layers, \
+        f"{cfg.name}: num_layers {cfg.num_layers} not divisible by unit {unit}"
+
+    keys = jax.random.split(key, n_units + 5)
+    p: Params = {
+        "embed": embed_init(keys[-1], (cfg.padded_vocab, cfg.d_model),
+                            jnp.dtype(cfg.param_dtype)),
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = layers.dense_init(keys[-2], (cfg.d_model, cfg.padded_vocab),
+                                      jnp.dtype(cfg.param_dtype))
+
+    def one_unit(k):
+        uks = jax.random.split(k, len(unit))
+        return {f"b{i}_{kind}": init_block(uk, kind, cfg)
+                for i, (kind, uk) in enumerate(zip(unit, uks))}
+
+    units = [one_unit(keys[i]) for i in range(n_units)]
+    p["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+
+    if BLOCK_SHARED_ATTN in unit or cfg.shared_attn_every:
+        p["shared"] = {"ln": init_norm(cfg),
+                       "attn": init_attention(keys[-3], cfg)}
+    if cfg.encoder_layers:
+        eks = jax.random.split(keys[-4], cfg.encoder_layers + 1)
+        enc = [init_block(eks[i], BLOCK_ATTN, cfg)
+               for i in range(cfg.encoder_layers)]
+        p["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+        p["enc_norm"] = init_norm(cfg)
+        xks = jax.random.split(eks[-1], n_units * len(unit))
+        xattn = [{"ln": init_norm(cfg), "attn": init_attention(xk, cfg)}
+                 for xk in xks[: n_units]]
+        p["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs), *xattn)
+    if e2.slu.enabled:
+        p["slu_gate"] = slu.init_gate(keys[-5], cfg, e2.slu)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _unit_kinds(cfg: ModelConfig) -> Tuple[str, ...]:
+    return cfg.block_unit or (cfg.blocks[0],)
+
+
+def unit_flops(cfg: ModelConfig, seq: int) -> jnp.ndarray:
+    """Analytic fwd FLOPs per gated sub-block of one unit (for Eq. 1's C)."""
+    vals = []
+    for kind in _unit_kinds(cfg):
+        f = block_fwd_flops(cfg, kind, seq)
+        subs = _sub_blocks(kind)
+        vals.extend([f / len(subs)] * len(subs))
+    return jnp.asarray(vals, jnp.float32)
+
+
+def encoder_fwd(p: Params, embeds: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Whisper-style bidirectional encoder over frontend embeddings."""
+
+    @jax.checkpoint   # without remat the scan saves per-layer O(F^2) scores
+    def body(x, bp):
+        x = hint_batch(x)
+        x = x + attention_fwd(bp["attn"], apply_norm(bp["ln1"], x, cfg), cfg,
+                              causal=False)
+        x = x + mlp_fwd(bp["mlp"], apply_norm(bp["ln2"], x, cfg), cfg)
+        return x, None
+
+    x, _ = lax.scan(body, embeds, p["encoder"])
+    return apply_norm(p["enc_norm"], x, cfg)
+
+
+def lm_fwd(p: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+           e2: Optional[E2TrainConfig] = None,
+           rng: Optional[jnp.ndarray] = None,
+           frontend_embeds: Optional[jnp.ndarray] = None,
+           train: bool = True,
+           remat: str = "block") -> LMOutput:
+    """tokens: (B, S) int32.  frontend_embeds: (B, F, d) for audio/vlm."""
+    e2 = e2 or E2TrainConfig()
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    dt = cfg.act_dtype
+    x = p["embed"][tokens].astype(dt)
+
+    memory = None
+    if cfg.encoder_layers:
+        assert frontend_embeds is not None, "enc-dec arch needs frontend embeds"
+        memory = encoder_fwd(p, frontend_embeds.astype(dt), cfg)
+    elif frontend_embeds is not None:
+        # VLM: prepend patch embeddings to the token stream
+        x = jnp.concatenate([frontend_embeds.astype(dt), x], axis=1)
+
+    unit = _unit_kinds(cfg)
+    n_units = cfg.num_layers // len(unit)
+    S = x.shape[1]
+    uflops = unit_flops(cfg, S)
+
+    slu_on = e2.slu.enabled and train and "slu_gate" in p
+    gate_params = p.get("slu_gate")
+    shared = p.get("shared", {})
+    has_cross = cfg.encoder_layers > 0
+
+    # Sequence parallelism (training path): shard the residual stream's S
+    # axis over the model mesh axis between blocks.  Valid for attention/MoE
+    # units (their token-pointwise projections run S-sharded; attention
+    # all-gathers KV, standard SP) but not for SSM/xLSTM units, whose
+    # sequential chunk scans iterate the S axis.  This divides the
+    # saved-residual stack — the training memory peak — by the model size.
+    sp = train and all(k in (BLOCK_ATTN, BLOCK_MOE) for k in unit)
+    stream_axes = ("batch", "seq", None) if sp else ("batch", None, None)
+    x = hint(x, *stream_axes)
+
+    def unit_body(carry, scanned):
+        x, gst, base_rng = carry
+        # barrier: stops XLA from hoisting the bwd loop's bf16->f32 upcast of
+        # the saved-residual stack out of the loop (a full-size fp32 copy of
+        # all saved activations — observed +14 GiB on deepseek train_4k).
+        x = lax.optimization_barrier(x)
+        x = hint(x, *stream_axes)  # re-pin stream sharding inside the body
+        up = scanned["unit"]
+        idx = scanned["idx"]
+        urng = jax.random.fold_in(base_rng, idx)
+        aux = jnp.zeros((), jnp.float32)
+        kps, exs = [], []
+        gate_ctx = (gate_params, gst) if slu_on else None
+        for i, kind in enumerate(unit):
+            brng = jax.random.fold_in(urng, i)
+            glob = idx * len(unit) + i
+            force = jnp.logical_or(glob == 0, glob == cfg.num_layers - 1) \
+                if e2.slu.never_skip_first_last else jnp.bool_(False)
+            x, info, gate_ctx = block_apply(up[f"b{i}_{kind}"], shared, kind,
+                                            x, cfg, e2, gate_ctx, brng, force,
+                                            prefer_chunked_attn=not sp)
+            if has_cross and kind == BLOCK_ATTN:
+                cp = scanned["cross"]
+                x = x + cross_attention_fwd(cp["attn"],
+                                            apply_norm(cp["ln"], x, cfg),
+                                            memory, cfg)
+            aux = aux + info["aux"]
+            kps.append(info["kp"]); exs.append(info["ex"])
+        gst = gate_ctx[1] if gate_ctx is not None else gst
+        return (x, gst, base_rng), (aux, jnp.concatenate(kps),
+                                    jnp.concatenate(exs))
+
+    if remat == "block":
+        # prevent_cse=True (default) matters: with CSE allowed, XLA hoists
+        # dtype converts of the saved-residual stack out of the backward
+        # loop, materializing a second full-size fp32 copy (observed +14 GiB
+        # on deepseek-moe train_4k).
+        unit_body = jax.checkpoint(unit_body)
+
+    gst0 = slu.init_gate_state(e2.slu)
+    scanned = {"unit": p["units"], "idx": jnp.arange(n_units)}
+    if has_cross:
+        scanned["cross"] = p["cross"]
+    (x, _, _), (auxs, kps, exs) = lax.scan(
+        unit_body, (x, gst0, rng), scanned)
+
+    x = apply_norm(p["final_norm"], x, cfg)
+    head = p["embed"].T if cfg.tie_embeddings else p["head"]
+    # At the LM head, switch the stream from seq-sharded (SP) back to
+    # batch-sharded and shard the *vocab* axis instead: with seq-sharded
+    # logits the head/embed gradients become full (d, V) fp32 partials per
+    # device (all-reduce); vocab-sharded logits keep them (d, V/model),
+    # reduce-scattered — multi-GiB difference at 128k vocabs.
+    x = hint(x, "batch", None, None)
+    logits = hint((x @ head.astype(dt)).astype(jnp.float32),
+                  "batch", None, "vocab")
+    if cfg.padded_vocab != cfg.vocab_size:   # mask pad ids (never predicted)
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+
+    slu_cost = slu.flops_regularizer(kps.reshape(-1),
+                                     jnp.tile(uflops, n_units), e2.slu) \
+        if slu_on else jnp.float32(1.0)
+    return LMOutput(logits=logits, aux_loss=jnp.sum(auxs),
+                    slu_cost=slu_cost, slu_executed=exs, slu_keep_probs=kps)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(p: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            e2: Optional[E2TrainConfig] = None,
+            rng: Optional[jnp.ndarray] = None,
+            remat: str = "block") -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    e2 = e2 or E2TrainConfig()
+    out = lm_fwd(p, batch["tokens"], cfg, e2, rng,
+                 frontend_embeds=batch.get("frontend"), remat=remat)
+    logits = out.logits
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:        # VLM prepended patches
+        logits = logits[:, -labels.shape[1]:]
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    # SPMD-partitionable cross-entropy: a gather (take_along_axis) over the
+    # vocab-sharded axis would force the partitioner to replicate the full
+    # (B, S, V) logits per device; logsumexp + one-hot contraction keep every
+    # op sharded over (batch, -, vocab) with only tiny all-reduces.
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = (lab[..., None] == jnp.arange(logits.shape[-1])[None, None, :])
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - ll
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + cfg.router_aux_coef * out.aux_loss
+    if e2.slu.enabled:
+        total = total + e2.slu.alpha * out.slu_cost       # Eq. (1)
+    metrics = {"loss": loss, "aux_loss": out.aux_loss,
+               "slu_cost": out.slu_cost,
+               "slu_exec_ratio": jnp.mean(out.slu_executed)}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    unit = _unit_kinds(cfg)
+    n_units = cfg.num_layers // len(unit)
+
+    def one_unit():
+        st = {}
+        for i, kind in enumerate(unit):
+            if kind in (BLOCK_ATTN, BLOCK_MOE):
+                st[f"b{i}"] = {"kv": init_kv_cache(cfg, batch, max_len, dtype)}
+            elif kind == BLOCK_MAMBA:
+                st[f"b{i}"] = ssm.init_mamba_state(cfg, batch)
+            elif kind == BLOCK_MLSTM:
+                st[f"b{i}"] = ssm.init_mlstm_state(cfg, batch)
+            elif kind == BLOCK_SLSTM:
+                st[f"b{i}"] = ssm.init_slstm_state(cfg, batch)
+            elif kind == BLOCK_SHARED_ATTN:
+                st[f"b{i}"] = {"kv": init_kv_cache(cfg, batch, max_len, dtype)}
+        return st
+
+    units = [one_unit() for _ in range(n_units)]
+    state = {"units": jax.tree.map(lambda *xs: jnp.stack(xs), *units),
+             "pos": jnp.zeros((batch,), jnp.int32)}
+    return state
+
+
+def prefill_to_state(p: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+                     max_kv_len: int,
+                     memory: Optional[jnp.ndarray] = None,
+                     frontend_embeds: Optional[jnp.ndarray] = None,
+                     cache_dtype=jnp.bfloat16
+                     ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Bulk prefill: full-sequence forward that RETURNS the decode state
+    (KV ring buffers / recurrent states) — the production prefill->decode
+    handoff.  tokens: (B, S) -> (last-position logits (B, 1, V), state)."""
+    from repro.models.layers import fill_kv_cache
+    dt = cfg.act_dtype
+    B, S = tokens.shape
+    x = p["embed"][tokens].astype(dt)
+    if cfg.encoder_layers:
+        assert memory is not None or frontend_embeds is not None
+        if memory is None:
+            memory = encoder_fwd(p, frontend_embeds.astype(dt), cfg)
+    elif frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(dt), x], axis=1)
+    unit = _unit_kinds(cfg)
+    shared = p.get("shared", {})
+    has_cross = cfg.encoder_layers > 0
+
+    def unit_body(x, scanned):
+        up = scanned["unit"]
+        nst = {}
+        for i, kind in enumerate(unit):
+            bp = up.get(f"b{i}_{kind}")
+            if kind in (BLOCK_ATTN, BLOCK_MOE):
+                h = apply_norm(bp["ln1"], x, cfg)
+                y, (k, v) = attention_fwd(bp["attn"], h, cfg, return_kv=True)
+                x = x + y
+                nst[f"b{i}"] = {"kv": fill_kv_cache(cfg, k, v, max_kv_len,
+                                                    cache_dtype)}
+                if has_cross and kind == BLOCK_ATTN:
+                    cp = scanned["cross"]
+                    x = x + cross_attention_fwd(
+                        cp["attn"], apply_norm(cp["ln"], x, cfg), memory, cfg)
+                h2 = apply_norm(bp["ln2"], x, cfg)
+                if kind == BLOCK_ATTN:
+                    x = x + mlp_fwd(bp["mlp"], h2, cfg)
+                else:
+                    y2, _ = moe.moe_fwd(bp["moe"], h2, cfg)
+                    x = x + y2
+            elif kind == BLOCK_MAMBA:
+                y, st = ssm.mamba_fwd(bp["mamba"], apply_norm(bp["ln1"], x, cfg),
+                                      cfg, return_state=True)
+                x = x + y
+                nst[f"b{i}"] = st
+            elif kind == BLOCK_MLSTM:
+                y, st = ssm.mlstm_fwd(bp["mlstm"], apply_norm(bp["ln1"], x, cfg),
+                                      cfg, return_state=True)
+                x = x + y
+                nst[f"b{i}"] = st
+            elif kind == BLOCK_SLSTM:
+                y, st = ssm.slstm_fwd(bp["slstm"], apply_norm(bp["ln1"], x, cfg),
+                                      cfg, return_state=True)
+                x = x + y
+                nst[f"b{i}"] = st
+            elif kind == BLOCK_SHARED_ATTN:
+                h = apply_norm(shared["ln"], x, cfg)
+                y, (k, v) = attention_fwd(shared["attn"], h, cfg,
+                                          return_kv=True)
+                x = x + y
+                nst[f"b{i}"] = {"kv": fill_kv_cache(cfg, k, v, max_kv_len,
+                                                    cache_dtype)}
+        return x, nst
+
+    scanned = {"unit": p["units"]}
+    if has_cross:
+        scanned["cross"] = p["cross"]
+    x, units_state = lax.scan(unit_body, x, scanned)
+    x = apply_norm(p["final_norm"], x, cfg)
+    head = p["embed"].T if cfg.tie_embeddings else p["head"]
+    logits = (x[:, -1:] @ head.astype(dt)).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+    total = x.shape[1]                      # S (+ frontend tokens for VLM)
+    state = {"units": units_state,
+             "pos": jnp.full((B,), total, jnp.int32)}
+    return logits, state
+
+
+def decode_step(p: Params, token: jnp.ndarray, state: Dict[str, Any],
+                cfg: ModelConfig,
+                memory: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray, Dict]:
+    """token: (B, 1) int32 -> (logits (B, 1, V), new state).  No SLU at serve."""
+    dt = cfg.act_dtype
+    x = p["embed"][token].astype(dt)
+    unit = _unit_kinds(cfg)
+    pos = state["pos"]
+    shared = p.get("shared", {})
+    has_cross = cfg.encoder_layers > 0
+
+    def unit_body(x, scanned):
+        x = hint_batch(x)
+        up, ust = scanned["unit"], scanned["state"]
+        nst = {}
+        for i, kind in enumerate(unit):
+            bp = up.get(f"b{i}_{kind}")
+            st = ust[f"b{i}"]
+            if kind in (BLOCK_ATTN, BLOCK_MOE):
+                h = apply_norm(bp["ln1"], x, cfg)
+                y, kv = attention_decode(bp["attn"], h, cfg, st["kv"], pos)
+                x = x + y
+                if has_cross and kind == BLOCK_ATTN:
+                    cp = scanned["cross"]
+                    x = x + cross_attention_fwd(
+                        cp["attn"], apply_norm(cp["ln"], x, cfg), memory, cfg)
+                h2 = apply_norm(bp["ln2"], x, cfg)
+                if kind == BLOCK_ATTN:
+                    x = x + mlp_fwd(bp["mlp"], h2, cfg)
+                else:
+                    y2, _ = moe.moe_fwd(bp["moe"], h2, cfg)
+                    x = x + y2
+                nst[f"b{i}"] = {"kv": kv}
+            elif kind == BLOCK_MAMBA:
+                y, s2 = ssm.mamba_step(bp["mamba"],
+                                       apply_norm(bp["ln1"], x, cfg), st, cfg)
+                x = x + y
+                nst[f"b{i}"] = s2
+            elif kind == BLOCK_MLSTM:
+                y, s2 = ssm.mlstm_step(bp["mlstm"],
+                                       apply_norm(bp["ln1"], x, cfg), st, cfg)
+                x = x + y
+                nst[f"b{i}"] = s2
+            elif kind == BLOCK_SLSTM:
+                y, s2 = ssm.slstm_step(bp["slstm"],
+                                       apply_norm(bp["ln1"], x, cfg), st, cfg)
+                x = x + y
+                nst[f"b{i}"] = s2
+            elif kind == BLOCK_SHARED_ATTN:
+                h = apply_norm(shared["ln"], x, cfg)
+                y, kv = attention_decode(shared["attn"], h, cfg, st["kv"], pos)
+                x = x + y
+                nst[f"b{i}"] = {"kv": kv}
+        return x, nst
+
+    scanned = {"unit": p["units"], "state": state["units"]}
+    if has_cross:
+        scanned["cross"] = p["cross"]
+    x, new_units = lax.scan(unit_body, x, scanned)
+    x = apply_norm(p["final_norm"], x, cfg)
+    head = p["embed"].T if cfg.tie_embeddings else p["head"]
+    logits = hint((x @ head.astype(dt)).astype(jnp.float32),
+                  "batch", None, "vocab")
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+    return logits, {"units": new_units, "pos": pos + 1}

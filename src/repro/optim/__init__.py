@@ -1,0 +1,11 @@
+"""Optimizers (pure-functional, optax-style trees of state).
+
+The paper's recipes: SGD + momentum 0.9 + wd 1e-4 for baselines (He et al.
+settings); SignSGD / PSG with lr 0.03 and SWA.
+"""
+from repro.optim.sgd import sgd_init, sgd_apply, adamw_init, adamw_apply
+from repro.optim.signsgd import signsgd_init, signsgd_apply
+from repro.optim.swa import swa_init, swa_update, swa_params
+from repro.optim.schedules import make_schedule
+from repro.optim.majority_vote import compress_signs, majority_vote_psum
+from repro.optim.api import make_optimizer, Optimizer

@@ -1,0 +1,45 @@
+"""Unified optimizer facade used by the trainer."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax.numpy as jnp
+
+from repro.core.config import TrainConfig
+from repro.optim import schedules, sgd, signsgd
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Dict[str, Any]]
+    apply: Callable[..., Any]          # (params, grads, state, step) -> (p, s)
+    name: str
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    sched = schedules.make_schedule(cfg)
+
+    if cfg.optimizer == "sgdm":
+        def apply(params, grads, state, step):
+            return sgd.sgd_apply(params, grads, state, sched(step),
+                                 momentum=cfg.momentum,
+                                 weight_decay=cfg.weight_decay)
+        return Optimizer(sgd.sgd_init, apply, "sgdm")
+
+    if cfg.optimizer in ("signsgd", "psg"):
+        # paper §4.1/App. B: lr 0.03, wd 5e-4 when Sign/PSG is used
+        def apply(params, grads, state, step):
+            return signsgd.signsgd_apply(params, grads, state, sched(step),
+                                         momentum=cfg.momentum
+                                         if cfg.optimizer == "signsgd" else 0.0,
+                                         weight_decay=cfg.weight_decay)
+        return Optimizer(signsgd.signsgd_init, apply, cfg.optimizer)
+
+    if cfg.optimizer == "adamw":
+        def apply(params, grads, state, step):
+            return sgd.adamw_apply(params, grads, state, sched(step),
+                                   weight_decay=cfg.weight_decay)
+        return Optimizer(sgd.adamw_init, apply, "adamw")
+
+    raise ValueError(cfg.optimizer)

@@ -1,0 +1,31 @@
+"""LR schedules.  The paper: lr 0.1, step-decay x0.1 at 32k/48k of 64k
+iterations (He et al. protocol); lr 0.03 constant-ish when PSG/SignSGD is on.
+Scaling rule for reduced-iteration baselines (§4.2): decay points scale
+proportionally with the total budget."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.config import TrainConfig
+
+
+def make_schedule(cfg: TrainConfig):
+    base = cfg.lr
+    total = cfg.total_steps
+
+    def step_fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        if cfg.schedule == "constant":
+            lr = jnp.full_like(step, base)
+        elif cfg.schedule == "cosine":
+            t = jnp.clip(step / total, 0.0, 1.0)
+            lr = 0.5 * base * (1.0 + jnp.cos(jnp.pi * t))
+        else:  # step decay (paper)
+            lr = base * jnp.ones_like(step)
+            for frac in cfg.decay_points:
+                lr = jnp.where(step >= frac * total, lr * cfg.decay_factor, lr)
+        if cfg.warmup_steps:
+            lr = lr * jnp.clip(step / cfg.warmup_steps, 0.0, 1.0)
+        return lr
+
+    return step_fn

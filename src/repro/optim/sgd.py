@@ -1,0 +1,52 @@
+"""SGD with momentum/Nesterov + decoupled weight decay; AdamW for reference."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params) -> Dict[str, Any]:
+    return {"momentum": jax.tree.map(jnp.zeros_like, params)}
+
+
+def sgd_apply(params, grads, state, lr, *, momentum: float = 0.9,
+              weight_decay: float = 1e-4, nesterov: bool = False):
+    def upd(p, g, m):
+        g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        m_new = momentum * m.astype(jnp.float32) + g
+        step = (g + momentum * m_new) if nesterov else m_new
+        return ((p.astype(jnp.float32) - lr * step).astype(p.dtype),
+                m_new.astype(m.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["momentum"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"momentum": new_m}
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    return {"mu": jax.tree.map(jnp.zeros_like, params),
+            "nu": jax.tree.map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_apply(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                weight_decay=0.1):
+    c = state["count"] + 1
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+        mu_h = mu_n / (1 - b1 ** c)
+        nu_h = nu_n / (1 - b2 ** c)
+        step = mu_h / (jnp.sqrt(nu_h) + eps) + weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * step).astype(p.dtype),
+                mu_n.astype(mu.dtype), nu_n.astype(nu.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), {"mu": pick(1), "nu": pick(2), "count": c}

@@ -1,0 +1,36 @@
+"""SignSGD [Bernstein et al. 2018] — the update rule PSG plugs into.
+
+``w <- w - lr * sign(g)``.  When the gradient tree already contains signs
+(PSG's custom-vjp emits {-1, 0, +1}) the sign() here is idempotent; when
+gradients were mean-aggregated across data-parallel replicas, sign(mean of
+signs) IS the majority vote of distributed SignSGD — which is why PSG
+composes into 1-bit gradient compression (optim/majority_vote.py).
+
+Optional momentum = Signum (sign of the momentum buffer).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def signsgd_init(params) -> Dict[str, Any]:
+    return {"momentum": jax.tree.map(jnp.zeros_like, params)}
+
+
+def signsgd_apply(params, grads, state, lr, *, momentum: float = 0.0,
+                  weight_decay: float = 0.0):
+    def upd(p, g, m):
+        g = g.astype(jnp.float32)
+        m_new = momentum * m.astype(jnp.float32) + (1 - momentum) * g \
+            if momentum > 0 else g
+        step = jnp.sign(m_new) + weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * step).astype(p.dtype),
+                m_new.astype(m.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["momentum"])
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), {"momentum": pick(1)}

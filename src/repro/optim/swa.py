@@ -1,0 +1,37 @@
+"""Stochastic Weight Averaging — the paper stabilizes PSG/SignSGD with SWA
+(§4.1, following SWALP [Yang et al. 2019]).
+
+The average is maintained as a running mean of the parameter trajectory
+from ``start_step`` on; ``swa_params`` returns the averaged weights for
+eval.  At multi-pod scale the averaging is element-wise on already-sharded
+params — no extra collectives — and is scheduled off the critical path
+(it reads the step's output params, it does not feed the next step).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_init(params) -> Dict[str, Any]:
+    # copy=True: the average must not alias the live params (donation safety)
+    return {"avg": jax.tree.map(
+        lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def swa_update(state, params, step, start_step):
+    active = step >= start_step
+    c = state["count"] + jnp.where(active, 1, 0)
+
+    def upd(a, p):
+        w = jnp.where(active, 1.0 / jnp.maximum(c, 1).astype(jnp.float32), 0.0)
+        return a + w * (p.astype(jnp.float32) - a)
+
+    return {"avg": jax.tree.map(upd, state["avg"], params), "count": c}
+
+
+def swa_params(state, like):
+    return jax.tree.map(lambda a, p: a.astype(p.dtype), state["avg"], like)

@@ -1,0 +1,2 @@
+from repro.training.train_step import make_train_step, TrainState
+from repro.training.trainer import Trainer

@@ -1,0 +1,112 @@
+"""Train-step builder: loss + grad + E²-Train integration + optimizer.
+
+One function, ``make_train_step(exp)``, returns a pure jittable
+``(state, batch, step) -> (state, metrics)`` covering:
+
+* mixed-precision loss (params fp32, activations bf16),
+* PSG routing (trace-time ``psg.enable``) and sign-gradient handling,
+* microbatch gradient accumulation (``lax.scan``; for PSG the per-micro
+  signs sum then re-sign — a majority vote over microbatches),
+* majority-vote 1-bit compression marker (sign() after pjit's mean-reduce),
+* SLU rng/regularizer plumbing (inside the model),
+* optimizer + optional SWA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import psg as psgmod
+from repro.core.config import Experiment
+from repro.distributed.sharding import constrain_like_params
+from repro.models import transformer
+from repro.optim.api import make_optimizer
+from repro.optim.majority_vote import majority_vote_tree
+from repro.optim.swa import swa_init, swa_params, swa_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    swa: Any                     # None when disabled (static)
+    step: jnp.ndarray
+
+
+def init_train_state(key, exp: Experiment) -> TrainState:
+    params = transformer.init_lm(key, exp.model, exp.e2)
+    opt = make_optimizer(exp.train)
+    swa = swa_init(params) if (exp.e2.psg.enabled and exp.e2.psg.swa) else None
+    return TrainState(params=params, opt=opt.init(params), swa=swa,
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(exp: Experiment):
+    cfg, e2, tc = exp.model, exp.e2, exp.train
+    opt = make_optimizer(tc)
+    psg_cfg = e2.psg if e2.psg.enabled else None
+    m = max(tc.microbatches, 1)
+
+    def loss_fn(params, batch, rng):
+        with psgmod.enable(psg_cfg):
+            return transformer.lm_loss(params, batch, cfg, e2, rng,
+                                       remat=tc.remat)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]
+                   ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        rng = jax.random.fold_in(jax.random.PRNGKey(tc.seed), state.step)
+        if m == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch, rng)
+            grads = constrain_like_params(grads)
+        else:
+            def micro(carry, mb):
+                g_acc, i = carry
+                (l, mt), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb, jax.random.fold_in(rng, i))
+                g = constrain_like_params(g)
+                acc = constrain_like_params(jax.tree.map(jnp.add, g_acc, g))
+                return (acc, i + 1), (l, mt)
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch)
+            g0 = jax.tree.map(jnp.zeros_like, state.params)
+            (grads, _), (losses, mets) = jax.lax.scan(micro, (g0, 0), mbs)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, mets)
+
+        if psg_cfg is not None:
+            # per-replica signs were mean-reduced by pjit across data/pod;
+            # the final sign() completes the distributed majority vote.
+            grads = majority_vote_tree(grads)
+        if tc.grad_clip > 0 and psg_cfg is None:
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                              for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, tc.grad_clip / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gn = jnp.float32(0.0)
+
+        params, opt_state = opt.apply(state.params, grads, state.opt,
+                                      state.step)
+        swa = state.swa
+        if swa is not None:
+            swa = swa_update(swa, params, state.step,
+                             int(tc.total_steps * e2.psg.swa_start_frac))
+        metrics = dict(metrics)
+        metrics["total_loss"] = loss
+        metrics["grad_norm"] = gn
+        return TrainState(params, opt_state, swa, state.step + 1), metrics
+
+    return train_step
+
+
+def eval_params(state: TrainState, exp: Experiment):
+    """Weights to evaluate with — SWA average when PSG+SWA is active."""
+    if state.swa is not None:
+        return swa_params(state.swa, state.params)
+    return state.params

@@ -1,0 +1,85 @@
+"""Training loop orchestration: SMD, checkpoints, straggler policy, metrics.
+
+The loop is deliberately thin — all compute lives in the jitted train_step —
+and deals with the operational concerns of a long-running multi-pod job:
+
+* SMD-dropped steps advance the step counter without compute or data fetch;
+* periodic + final checkpoints via ``repro.ft.checkpoint`` (async save);
+* a straggler hook: if a step exceeds ``deadline_s`` (observed on this
+  host), the *next* step is pre-declared droppable — the SMD machinery makes
+  that sound (DESIGN.md §7).  On real multi-host deployments the deadline
+  check runs per-host against the shared counter-based SMD schedule.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.config import Experiment
+from repro.core.smd import smd_keep_host
+from repro.training.train_step import TrainState, make_train_step
+
+
+class Trainer:
+    def __init__(self, exp: Experiment, state: TrainState,
+                 make_batch: Callable[[int, int], Dict],
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0,
+                 deadline_s: float = 0.0,
+                 shard: int = 0):
+        self.exp = exp
+        self.state = state
+        self.make_batch = make_batch
+        self.step_fn = jax.jit(make_train_step(exp), donate_argnums=(0,))
+        self.ckpt_dir = checkpoint_dir
+        self.ckpt_every = checkpoint_every
+        self.deadline_s = deadline_s
+        self.shard = shard
+        self.history: List[Dict[str, float]] = []
+        self._straggler_pending = False
+        self.executed_steps = 0
+        self.dropped_steps = 0
+
+    def run(self, num_steps: int, log_every: int = 0) -> List[Dict[str, float]]:
+        e2 = self.exp.e2
+        for _ in range(num_steps):
+            step = int(self.state.step)
+            drop = False
+            if e2.smd.enabled and not smd_keep_host(self.exp.train.seed, step,
+                                                    e2.smd.drop_prob):
+                drop = True
+            if self._straggler_pending:       # straggler -> SMD-style drop
+                drop = True
+                self._straggler_pending = False
+            if drop:
+                self.state = self.state._replace(step=self.state.step + 1)
+                self.dropped_steps += 1
+                continue
+
+            batch = self.make_batch(step, self.shard)
+            t0 = time.perf_counter()
+            self.state, metrics = self.step_fn(self.state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            metrics["step"] = step
+            metrics["wall_s"] = dt
+            self.history.append(metrics)
+            self.executed_steps += 1
+            if self.deadline_s and dt > self.deadline_s:
+                self._straggler_pending = True
+            if self.ckpt_dir and self.ckpt_every and \
+                    (step + 1) % self.ckpt_every == 0:
+                self._save(step)
+            if log_every and step % log_every == 0:
+                print(f"step {step}: loss={metrics.get('total_loss', 0):.4f} "
+                      f"({dt*1e3:.0f} ms)")
+        if self.ckpt_dir:
+            self._save(int(self.state.step) - 1)
+        return self.history
+
+    def _save(self, step: int):
+        from repro.ft.checkpoint import save_checkpoint
+        save_checkpoint(self.ckpt_dir, self.state, step, async_save=True)

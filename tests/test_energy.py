@@ -1,0 +1,69 @@
+"""Energy model: paper-table reproduction (the quantitative core claims)."""
+import numpy as np
+import pytest
+
+from repro.core.config import ModelConfig
+from repro.core.energy import (ENERGY_45NM, FP32_MAC_PJ, PSG_FACTOR_PAPER,
+                               computational_savings, mac_energy_pj,
+                               model_flops_6nd, model_fwd_flops,
+                               mult_energy_pj, psg_factor_from_energy_model,
+                               roofline_terms, train_step_flops)
+
+
+def test_horowitz_8bit_savings_claims():
+    """Paper §3.3: 8-bit mult/add save ~95/97% vs 32-bit fp."""
+    mult_saving = 1 - mult_energy_pj(8, 8) / ENERGY_45NM["mul_fp32"]
+    assert mult_saving > 0.93
+    from repro.core.energy import add_energy_pj
+    add_saving = 1 - add_energy_pj(8) / ENERGY_45NM["add_fp32"]
+    assert add_saving > 0.95
+
+
+def test_paper_table3_computational_savings():
+    """Table 3: savings 80.27 / 85.20 / 90.13 % at SLU skip 20/40/60%
+    with SMD ratio 0.67 — reproduced by the composition law."""
+    for skip, want in [(0.2, 0.8027), (0.4, 0.8520), (0.6, 0.9013)]:
+        got = computational_savings(0.67, skip, PSG_FACTOR_PAPER)
+        assert abs(got - want) < 0.002, (skip, got, want)
+
+
+def test_psg_factor_first_principles_in_range():
+    """Our 45nm-model PSG factor should be *at most* the paper's implied
+    0.368 (the paper's figure includes overheads our MAC-only model omits)."""
+    r = psg_factor_from_energy_model()
+    assert 0.02 < r < PSG_FACTOR_PAPER
+
+
+def test_model_flops_6nd_close_to_analytic_dense():
+    cfg = ModelConfig(name="t", family="dense", num_layers=4, d_model=256,
+                      num_heads=8, num_kv_heads=8, d_ff=1024, vocab_size=1000)
+    ana = train_step_flops(cfg, 4, 128)
+    nd = model_flops_6nd(cfg, 4, 128)
+    assert 0.4 < nd / ana < 1.6   # 6ND vs full accounting, same ballpark
+
+
+def test_moe_active_params_fewer_than_total():
+    cfg = ModelConfig(name="t", family="moe", num_layers=4, d_model=256,
+                      num_heads=8, num_kv_heads=8, d_ff=512, vocab_size=1000,
+                      num_experts=8, num_shared_experts=1, top_k=2,
+                      moe_d_ff=512)
+    assert cfg.active_param_count() < cfg.param_count()
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms(hlo_flops=1e15, hlo_bytes=1e12, coll_bytes=1e10,
+                       chips=256)
+    assert t["bottleneck"] in ("compute", "memory", "collective")
+    assert t["step_s"] == max(t["compute_s"], t["memory_s"],
+                              t["collective_s"])
+    # compute term: 1e15 / (256 * 197e12)
+    assert abs(t["compute_s"] - 1e15 / (256 * 197e12)) < 1e-12
+
+
+def test_sliding_window_reduces_attn_flops():
+    full = ModelConfig(name="t", family="dense", num_layers=2, d_model=128,
+                       num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=100)
+    swa = ModelConfig(name="t", family="dense", num_layers=2, d_model=128,
+                      num_heads=4, num_kv_heads=4, d_ff=256, vocab_size=100,
+                      sliding_window=512)
+    assert model_fwd_flops(swa, 1, 8192) < model_fwd_flops(full, 1, 8192)

@@ -1,0 +1,84 @@
+"""Optimizer properties (hypothesis) + schedules + SWA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.config import TrainConfig
+from repro.optim import (make_optimizer, sgd_apply, sgd_init, signsgd_apply,
+                         signsgd_init, swa_init, swa_params, swa_update)
+from repro.optim.schedules import make_schedule
+
+
+def test_sgd_momentum_matches_reference():
+    p = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.5, 0.5])}
+    st0 = sgd_init(p)
+    p1, st1 = sgd_apply(p, g, st0, lr=0.1, momentum=0.9, weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(p1["w"]), [0.95, -2.05], rtol=1e-6)
+    p2, _ = sgd_apply(p1, g, st1, lr=0.1, momentum=0.9, weight_decay=0.0)
+    # m2 = 0.9*0.5 + 0.5 = 0.95
+    np.testing.assert_allclose(np.asarray(p2["w"]), [0.855, -2.145], rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(lr=st.floats(1e-3, 0.5), seed=st.integers(0, 100))
+def test_signsgd_step_magnitude_property(lr, seed):
+    """Every SignSGD update moves each weight by exactly lr (wd=0),
+    up to fp32 rounding of p - lr*sign."""
+    key = jax.random.PRNGKey(seed)
+    p = {"w": jax.random.normal(key, (16,))}
+    g = {"w": jax.random.normal(jax.random.fold_in(key, 1), (16,))}
+    st0 = signsgd_init(p)
+    p1, _ = signsgd_apply(p, g, st0, lr, weight_decay=0.0)
+    delta = np.abs(np.asarray(p1["w"] - p["w"]))
+    nz = np.abs(np.asarray(g["w"])) > 0
+    np.testing.assert_allclose(delta[nz], lr, rtol=1e-2, atol=1e-6)
+
+
+def test_swa_average_correct():
+    p = {"w": jnp.array([0.0])}
+    st0 = swa_init(p)
+    vals = [1.0, 2.0, 3.0]
+    st_ = st0
+    for i, v in enumerate(vals):
+        st_ = swa_update(st_, {"w": jnp.array([v])}, step=i, start_step=0)
+    out = swa_params(st_, p)
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0], rtol=1e-6)
+
+
+def test_swa_respects_start_step():
+    p = {"w": jnp.array([0.0])}
+    st_ = swa_init(p)
+    for i, v in enumerate([10.0, 1.0, 3.0]):
+        st_ = swa_update(st_, {"w": jnp.array([v])}, step=i, start_step=1)
+    out = swa_params(st_, p)
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0], rtol=1e-6)
+
+
+def test_step_schedule_paper_protocol():
+    """lr 0.1, x0.1 at 32k/48k of 64k (He et al. / paper §4.1)."""
+    cfg = TrainConfig(lr=0.1, total_steps=64000, schedule="step",
+                      decay_points=(0.5, 0.75), decay_factor=0.1)
+    f = make_schedule(cfg)
+    assert abs(float(f(0)) - 0.1) < 1e-6
+    assert abs(float(f(31999)) - 0.1) < 1e-6
+    assert abs(float(f(32000)) - 0.01) < 1e-6
+    assert abs(float(f(48000)) - 0.001) < 1e-6
+
+
+def test_schedule_scales_with_budget():
+    """§4.2: reduced-iteration baselines scale decay points proportionally."""
+    cfg = TrainConfig(lr=0.1, total_steps=32000, schedule="step")
+    f = make_schedule(cfg)
+    assert abs(float(f(16000)) - 0.01) < 1e-6
+
+
+def test_make_optimizer_psg_is_sign_update():
+    cfg = TrainConfig(optimizer="psg", lr=0.03, schedule="constant",
+                      weight_decay=0.0, momentum=0.0)
+    opt = make_optimizer(cfg)
+    p = {"w": jnp.array([1.0, 1.0])}
+    g = {"w": jnp.array([0.001, -100.0])}   # magnitudes must not matter
+    p1, _ = opt.apply(p, g, opt.init(p), jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(p1["w"]), [0.97, 1.03], rtol=1e-5)

@@ -1,0 +1,162 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.config import ModelConfig, PSGConfig, SMDConfig
+
+
+# ---------------------------------------------------------------------------
+# MoE invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), E=st.sampled_from([2, 4, 8]),
+       k=st.integers(1, 2), cf=st.floats(0.25, 2.0))
+def test_moe_combine_weights_bounded(seed, E, k, cf):
+    """Per-token combine mass <= 1 (== 1 when nothing dropped)."""
+    from repro.models import moe
+    cfg = ModelConfig(name="t", family="moe", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=16, vocab_size=8,
+                      num_experts=E, top_k=min(k, E), moe_d_ff=16,
+                      capacity_factor=cf, dtype="float32")
+    p = moe.init_moe(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 1),
+                          (2, 8, 16))
+    y, aux = moe.moe_fwd(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux) >= 0.0
+    # identity-ish check: output magnitude bounded by expert lipschitz-ish
+    assert float(jnp.max(jnp.abs(y))) < 1e3
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_moe_capacity_enforced(seed):
+    """No expert receives more than C tokens per group (dispatch mass)."""
+    from repro.models import moe
+    cfg = ModelConfig(name="t", family="moe", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=16, vocab_size=8,
+                      num_experts=4, top_k=2, moe_d_ff=16,
+                      capacity_factor=0.5, dtype="float32")
+    # reproduce dispatch internals at small scale
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 16, 16))
+    p = moe.init_moe(jax.random.PRNGKey(seed + 1), cfg)
+    y, _ = moe.moe_fwd(p, x, cfg)     # no assertion error => shapes consistent
+    assert y.shape == x.shape
+
+
+# ---------------------------------------------------------------------------
+# RoPE / attention invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), shift=st.integers(1, 16))
+def test_rope_relative_property(seed, shift):
+    """<rope(q,i), rope(k,j)> depends only on i - j."""
+    from repro.models.layers import apply_rope
+    hd = 32
+    q = jax.random.normal(jax.random.PRNGKey(seed), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(seed), 1),
+                          (1, 1, 1, hd))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([[i]]), 1e4)
+        kj = apply_rope(k, jnp.array([[j]]), 1e4)
+        return float(jnp.sum(qi * kj))
+    a = dot_at(3, 1)
+    b = dot_at(3 + shift, 1 + shift)
+    assert abs(a - b) < 1e-3
+
+
+def test_attention_permutation_equivariance_over_batch():
+    from repro.models import layers
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=32, vocab_size=8,
+                      dtype="float32")
+    p = layers.init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32))
+    y = layers.attention_fwd(p, x, cfg)
+    perm = jnp.array([2, 0, 3, 1])
+    y2 = layers.attention_fwd(p, x[perm], cfg)
+    np.testing.assert_allclose(np.asarray(y[perm]), np.asarray(y2),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SMD statistics
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), p=st.floats(0.2, 0.8))
+def test_smd_drop_rate_binomial_bound(seed, p):
+    from repro.core.smd import smd_schedule
+    n = 600
+    sched = smd_schedule(SMDConfig(enabled=True, drop_prob=p), seed, n)
+    rate = 1.0 - sched.mean()
+    # 4-sigma binomial bound
+    sigma = (p * (1 - p) / n) ** 0.5
+    assert abs(rate - p) < 4 * sigma + 0.02
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_error_feedback_residual_bounded(seed):
+    """EF residual stays bounded (contraction property)."""
+    from repro.optim.error_feedback import ef_compress, ef_init
+    g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (32,))}
+    st_ = ef_init(g)
+    for i in range(50):
+        gi = {"w": jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(seed), i), (32,))}
+        payload, st_ = ef_compress(gi, st_)
+        assert set(np.unique(np.asarray(payload["w"]))) <= {-1.0, 0.0, 1.0}
+    res = float(jnp.max(jnp.abs(st_["residual"]["w"])))
+    assert res < 50.0    # bounded, not exploding
+
+
+def test_error_feedback_preserves_signal():
+    """Constant gradient: EF-sign average direction converges to sign(g)."""
+    from repro.optim.error_feedback import ef_compress, ef_init
+    g = {"w": jnp.array([0.3, -2.0, 0.01])}
+    st_ = ef_init(g)
+    acc = jnp.zeros(3)
+    for _ in range(100):
+        payload, st_ = ef_compress(g, st_)
+        acc = acc + payload["w"]
+    a = np.asarray(acc)
+    # dominant coordinates: direction preserved; tiny coordinate oscillates
+    # around zero by design (residual bounces across the sign boundary)
+    assert a[0] > 0 and a[1] < 0
+    assert abs(a[2]) <= 100
+
+
+# ---------------------------------------------------------------------------
+# energy model monotonicity
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(b1=st.integers(2, 16), b2=st.integers(2, 16))
+def test_mac_energy_monotone_in_bits(b1, b2):
+    from repro.core.energy import mult_energy_pj
+    lo, hi = sorted((b1, b2))
+    assert mult_energy_pj(lo, 8) <= mult_energy_pj(hi, 8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(smd=st.floats(0.3, 1.0), skip=st.floats(0.0, 0.9))
+def test_computational_savings_monotone(smd, skip):
+    from repro.core.energy import computational_savings
+    s = computational_savings(smd, skip)
+    assert 0.0 <= s <= 1.0
+    assert computational_savings(smd, min(skip + 0.05, 0.95)) >= s

@@ -1,0 +1,116 @@
+"""PSG semantics: Eq. (2) behavior, Eq. (3) bound, optimizer integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import psg
+from repro.core.config import PSGConfig
+
+
+def test_quantize_grid():
+    x = jnp.linspace(-1, 1, 101)
+    q = psg.quantize(x, 4)
+    # 4-bit grid has 15 levels, step = max/7
+    levels = np.unique(np.asarray(q))
+    assert len(levels) <= 15
+    assert np.abs(np.asarray(q) - np.asarray(x)).max() <= 1.0 / 7 / 2 + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(3, 12), seed=st.integers(0, 100))
+def test_quantize_error_bounded_property(bits, seed):
+    """|x - q(x)| <= Delta/2 where Delta = max|x| / (2^(b-1)-1)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    q = psg.quantize(x, bits)
+    delta = float(jnp.max(jnp.abs(x))) / (2 ** (bits - 1) - 1)
+    assert float(jnp.max(jnp.abs(q - x))) <= delta / 2 + 1e-6
+
+
+def test_sign_values():
+    cfg = PSGConfig(enabled=True)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (128, 32))
+    gy = jax.random.normal(k2, (128, 16))
+    s = psg.psg_grad_w_ref(x, gy, cfg)
+    vals = np.unique(np.asarray(s))
+    assert set(vals).issubset({-1.0, 0.0, 1.0})
+
+
+def test_predictor_usage_paper_claim():
+    """Paper §4.4: predictor decides >= 60% of entries at beta=0.05."""
+    cfg = PSGConfig(enabled=True, beta=0.05)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(k1, (1024, 256))
+    gy = jax.random.normal(k2, (1024, 128)) * 0.01
+    usage = float(psg.psg_predictor_usage(x, gy, cfg))
+    assert usage >= 0.6, f"predictor usage {usage}"
+
+
+@settings(max_examples=15, deadline=None)
+@given(bx=st.integers(3, 6), bg=st.integers(8, 12), seed=st.integers(0, 50))
+def test_prediction_error_bound_decays_with_precision(bx, bg, seed):
+    """Eq. (3): empirical flip rate <= Chebyshev bound (when bound < 1)."""
+    cfg = PSGConfig(enabled=True, bits_x_msb=bx, bits_g_msb=bg)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (256, 64))
+    gy = jax.random.normal(k2, (256, 32))
+    bound = float(psg.prediction_error_bound(x, gy, cfg))
+    # empirical sign-flip rate of confident predictions
+    s_pred = psg.psg_grad_w_ref(x, gy, cfg)
+    g_true = x.T @ gy
+    flips = float(jnp.mean((s_pred != jnp.sign(g_true)) &
+                           (jnp.abs(g_true) > 1e-6)))
+    if bound < 1.0:
+        assert flips <= bound + 0.05
+    # bound shrinks when predictor precision grows
+    cfg_hi = PSGConfig(enabled=True, bits_x_msb=bx + 2, bits_g_msb=bg + 2)
+    assert float(psg.prediction_error_bound(x, gy, cfg_hi)) <= bound
+
+
+def test_psg_matmul_custom_vjp():
+    cfg = PSGConfig(enabled=True)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    x = jax.random.normal(k1, (64, 32))
+    w = jax.random.normal(k2, (32, 16)) * 0.1
+
+    def loss(w):
+        y = psg.psg_matmul(x, w, cfg)
+        return jnp.sum(y ** 2)
+
+    g = jax.grad(loss)(w)
+    vals = np.unique(np.asarray(g))
+    assert set(vals).issubset({-1.0, 0.0, 1.0}), "dW must be sign-valued"
+
+
+def test_psg_einsum_dispatch_patterns():
+    cfg = PSGConfig(enabled=True)
+    key = jax.random.PRNGKey(3)
+    with psg.enable(cfg):
+        x = jax.random.normal(key, (2, 8, 16))
+        w = jax.random.normal(key, (16, 4, 8))
+        y = psg.einsum("bsd,dnh->bsnh", x, w)
+        assert y.shape == (2, 8, 4, 8)
+        x2 = jax.random.normal(key, (2, 8, 4, 8))
+        w2 = jax.random.normal(key, (4, 8, 16))
+        y2 = psg.einsum("bsnh,nhd->bsd", x2, w2)
+        assert y2.shape == (2, 8, 16)
+        xe = jax.random.normal(key, (3, 4, 5, 16))
+        we = jax.random.normal(key, (4, 16, 8))
+        ye = psg.einsum("gecd,edf->gecf", xe, we)
+        assert ye.shape == (3, 4, 5, 8)
+    # disabled -> plain einsum, exact
+    y_plain = psg.einsum("bsd,dnh->bsnh", x, w)
+    np.testing.assert_allclose(np.asarray(y_plain),
+                               np.asarray(jnp.einsum("bsd,dnh->bsnh", x, w)),
+                               rtol=1e-6)
+
+
+def test_majority_vote_composition():
+    """mean-of-signs then sign == majority vote; robust to missing voter."""
+    from repro.optim.majority_vote import majority_vote_tree
+    votes = jnp.array([[1., 1., -1.], [1., -1., -1.], [1., -1., 0.]])
+    mean = jnp.mean(votes, axis=0)
+    out = majority_vote_tree(mean)
+    np.testing.assert_array_equal(np.asarray(out), [1., -1., -1.])

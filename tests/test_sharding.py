@@ -1,0 +1,93 @@
+"""Sharding rules: spec shapes, divisibility fallbacks, candidate lists."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_mesh
+
+
+def abstract_mesh(shape, axes):
+    """Mesh stand-in for spec-logic tests (no devices needed)."""
+    from jax.sharding import AbstractMesh
+    return AbstractMesh(tuple(shape), tuple(axes))
+
+
+def _spec(shape, rule, mesh, fsdp=True):
+    return shd._spec_for(shape, rule, mesh, fsdp)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_rules_match_paths():
+    assert shd.logical_rules("units/b0_attn/attn/wq") == ("fsdp", "tp", None)
+    assert shd.logical_rules("units/b0_attn/mlp/w_up") == ("fsdp", "tp")
+    assert isinstance(shd.logical_rules("units/b0_moe/moe/w_up"), list)
+    assert shd.logical_rules("units/b0_attn/ln1/scale") == ()
+
+
+def test_divisibility_fallback():
+    mesh = abstract_mesh((2, 4), ("data", "model"))
+    # kv heads = 2 < model 4 -> heads axis dropped, fsdp kept
+    spec = _spec((128, 2, 16), ("fsdp", "tp", None), mesh)
+    assert spec == P("data", None, None)
+    # divisible case
+    spec2 = _spec((128, 8, 16), ("fsdp", "tp", None), mesh)
+    assert spec2 == P("data", "model", None)
+
+
+def test_candidate_list_expert_fallback():
+    mesh = abstract_mesh((2, 4), ("data", "model"))
+    rule = [("expert", "fsdp", None), (None, "fsdp", "tp")]
+    # 8 experts % 4 == 0 -> EP
+    assert _spec((8, 128, 64), rule, mesh) == P("model", "data", None)
+    # 3 experts -> TP fallback on d_ff
+    assert _spec((3, 128, 64), rule, mesh) == P(None, "data", "model")
+
+
+def test_right_alignment_covers_stacked_units():
+    mesh = abstract_mesh((2, 4), ("data", "model"))
+    # (units, d, heads, hd) with a 3-axis rule -> units axis replicated
+    spec = _spec((6, 128, 8, 32), ("fsdp", "tp", None), mesh)
+    assert spec == P(None, "data", "model", None)
+
+
+def test_param_shardings_tree(mesh):
+    import jax.numpy as jnp
+    from repro.configs import smoke_experiment
+    from repro.models import transformer as T
+    exp = smoke_experiment("llama3_8b")
+    params = jax.eval_shape(
+        lambda: T.init_lm(jax.random.PRNGKey(0), exp.model, exp.e2))
+    sh = shd.param_shardings(params, mesh)
+    assert jax.tree_util.tree_structure(sh) == \
+        jax.tree_util.tree_structure(params)
+
+
+def test_batch_sharding_drops_batch_one():
+    mesh = abstract_mesh((4, 2), ("data", "model"))
+    s = shd.batch_sharding(mesh, 2, shape=(1, 128))
+    assert s.spec == P(None, None)
+    s2 = shd.batch_sharding(mesh, 2, shape=(8, 128))
+    assert s2.spec == P("data", None)
+
+
+def test_hint_noop_outside_context():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    y = shd.hint(x, "batch", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_hint_dedupes_mesh_axes():
+    import jax.numpy as jnp
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with shd.activation_sharding(mesh):
+        def f(x):
+            return shd.hint(x, "batch", "seq", "vocab")  # seq+vocab -> model
+        with mesh:
+            jax.jit(f).lower(jnp.ones((4, 4, 4))).compile()

@@ -1,0 +1,96 @@
+"""SLU: gates, regularizer (Eq. 1), actual skipping, vs stochastic depth."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import slu
+from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
+                               SLUConfig, TrainConfig)
+
+
+def test_gate_outputs_probability():
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=16)
+    scfg = SLUConfig(enabled=True)
+    gp = slu.init_gate(jax.random.PRNGKey(0), cfg, scfg)
+    st = slu.init_gate_state(scfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+    p, st2 = slu.gate_apply(gp, x, st, scfg)
+    assert scfg.min_keep_prob <= float(p) <= 1.0
+    assert st2[0].shape == (scfg.gate_hidden,)
+
+
+def test_gated_residual_skip_and_keep():
+    x = jnp.ones((2, 4))
+    block = lambda h: 2 * h
+    # p=1 & forced keep -> executes
+    out, ex = slu.gated_residual(block, x, jnp.float32(1.0),
+                                 jax.random.PRNGKey(0), jnp.bool_(True))
+    np.testing.assert_allclose(np.asarray(out), 3.0, rtol=1e-6)
+    assert float(ex) == 1.0
+    # p=min & not forced: with key sweep, some skip (identity)
+    skipped = 0
+    for i in range(20):
+        out, ex = slu.gated_residual(block, x, jnp.float32(0.05),
+                                     jax.random.PRNGKey(i), jnp.bool_(False))
+        if float(ex) == 0.0:
+            np.testing.assert_allclose(np.asarray(out), 1.0)
+            skipped += 1
+    assert skipped >= 15
+
+
+def test_gate_gradient_flows_through_st():
+    """Straight-through: task loss produces d(loss)/d(gate params) != 0."""
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=16)
+    scfg = SLUConfig(enabled=True)
+    gp = slu.init_gate(jax.random.PRNGKey(0), cfg, scfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+
+    def loss(gp):
+        p, _ = slu.gate_apply(gp, x, slu.init_gate_state(scfg), scfg)
+        out, _ = slu.gated_residual(lambda h: h * 2, x, p,
+                                    jax.random.PRNGKey(3), jnp.bool_(True))
+        return jnp.sum(out ** 2) + 0.1 * p
+
+    g = jax.grad(loss)(gp)
+    total = sum(float(jnp.sum(jnp.abs(v))) for v in jax.tree.leaves(g))
+    assert total > 0.0
+
+
+def test_flops_regularizer_normalized():
+    kp = jnp.array([1.0, 0.5, 0.0, 1.0])
+    fl = jnp.array([10.0, 10.0, 10.0, 10.0])
+    c = slu.flops_regularizer(kp, fl, SLUConfig(enabled=True))
+    assert abs(float(c) - 2.5 / 4.0) < 1e-6
+
+
+@pytest.mark.slow
+def test_slu_alpha_drives_skipping():
+    """Eq. 1: larger alpha -> lower average keep prob after training."""
+    model = ModelConfig(name="t", family="dense", num_layers=4, d_model=64,
+                        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                        dtype="float32")
+
+    def run(alpha):
+        exp = Experiment(
+            model=model,
+            e2=E2TrainConfig(slu=SLUConfig(enabled=True, alpha=alpha,
+                                           never_skip_first_last=False)),
+            train=TrainConfig(global_batch=16, seq_len=32, lr=0.1,
+                              total_steps=60, schedule="constant"))
+        from repro.data.synthetic import MarkovLMTask, make_lm_batch
+        from repro.training.train_step import init_train_state
+        from repro.training.trainer import Trainer
+        task = MarkovLMTask(vocab=64)
+        mk = lambda s, sh: make_lm_batch(task, 0, s, sh, 16, 32)
+        st = init_train_state(jax.random.PRNGKey(0), exp)
+        tr = Trainer(exp, st, mk)
+        hist = tr.run(60)
+        return np.mean([h["slu_cost"] for h in hist[-10:]])
+
+    low, high = run(0.001), run(5.0)
+    assert high < low, (low, high)

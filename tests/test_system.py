@@ -1,0 +1,139 @@
+"""End-to-end behaviour tests for the E²-Train system."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
+                               PSGConfig, SLUConfig, SMDConfig, TrainConfig)
+from repro.data.synthetic import MarkovLMTask, make_lm_batch
+from repro.training.train_step import (eval_params, init_train_state,
+                                       make_train_step)
+from repro.training.trainer import Trainer
+
+TINY = ModelConfig(name="t", family="dense", num_layers=4, d_model=64,
+                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                   dtype="float32")
+
+
+def _mk(exp):
+    task = MarkovLMTask(vocab=exp.model.vocab_size)
+    return lambda s, sh: make_lm_batch(task, 0, s, sh, exp.train.global_batch,
+                                       exp.train.seq_len)
+
+
+def test_full_e2train_converges():
+    """SMD + SLU + PSG together: loss decreases toward the Bayes floor."""
+    exp = Experiment(
+        model=TINY,
+        e2=E2TrainConfig(smd=SMDConfig(True, 0.5),
+                         slu=SLUConfig(True, alpha=1e-3),
+                         psg=PSGConfig(True)),
+        train=TrainConfig(global_batch=16, seq_len=32, lr=0.03,
+                          optimizer="psg", total_steps=80,
+                          schedule="constant"))
+    state = init_train_state(jax.random.PRNGKey(0), exp)
+    tr = Trainer(exp, state, _mk(exp))
+    hist = tr.run(80)
+    first = np.mean([h["loss"] for h in hist[:3]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first * 0.6, (first, last)
+    assert tr.dropped_steps > 10          # SMD active
+    # SWA is active for PSG
+    assert tr.state.swa is not None
+    ev = eval_params(tr.state, exp)
+    assert jax.tree_util.tree_structure(ev) == \
+        jax.tree_util.tree_structure(tr.state.params)
+
+
+def test_psg_matches_signsgd_quality():
+    """Paper Tab. 2: PSG ~ SignSGD accuracy (here: final loss within 15%)."""
+    def run(optimizer, psg_on):
+        e2 = E2TrainConfig(psg=PSGConfig(enabled=psg_on, swa=False))
+        exp = Experiment(model=TINY, e2=e2,
+                         train=TrainConfig(global_batch=16, seq_len=32,
+                                           lr=0.03, optimizer=optimizer,
+                                           total_steps=60,
+                                           schedule="constant"))
+        st = init_train_state(jax.random.PRNGKey(0), exp)
+        tr = Trainer(exp, st, _mk(exp))
+        hist = tr.run(60)
+        return np.mean([h["loss"] for h in hist[-5:]])
+
+    l_sign = run("signsgd", False)
+    l_psg = run("psg", True)
+    assert l_psg < l_sign * 1.15, (l_sign, l_psg)
+
+
+def test_microbatch_equivalence_sgdm():
+    """grad accumulation == big batch for plain SGD (same data)."""
+    base = Experiment(model=TINY,
+                      train=TrainConfig(global_batch=16, seq_len=32, lr=0.1,
+                                        total_steps=10, schedule="constant",
+                                        microbatches=1))
+    exp2 = base.replace(train=dataclasses.replace(base.train, microbatches=4))
+    mk = _mk(base)
+    s1 = init_train_state(jax.random.PRNGKey(0), base)
+    s2 = init_train_state(jax.random.PRNGKey(0), exp2)
+    step1 = jax.jit(make_train_step(base))
+    step2 = jax.jit(make_train_step(exp2))
+    b = mk(0, 0)
+    s1b, m1 = step1(s1, b)
+    s2b, m2 = step2(s2, b)
+    for a, c in zip(jax.tree.leaves(s1b.params), jax.tree.leaves(s2b.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   atol=5e-3, rtol=1e-2)
+
+
+def test_serving_engine_waves():
+    from repro.serving.engine import Request, ServeEngine
+    exp = Experiment(model=TINY, train=TrainConfig())
+    from repro.models import transformer as T
+    params = T.init_lm(jax.random.PRNGKey(0), TINY, exp.e2)
+    eng = ServeEngine(exp, params, batch_slots=2, max_len=32)
+    rng = np.random.RandomState(0)
+    for i in range(5):
+        eng.submit(Request(rid=i, prompt=rng.randint(0, 64, size=4),
+                           max_new=6))
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.out) == 6 for r in done)
+    assert all(0 <= t < 64 for r in done for t in r.out)
+
+
+def test_resnet74_family_e2train_smoke():
+    """Paper-faithful path: CIFAR ResNet (reduced depth 14) + full E²-Train."""
+    from repro.data.synthetic import GaussianImageTask, make_image_batch
+    from repro.models import resnet as R
+    from repro.optim.api import make_optimizer
+
+    e2 = E2TrainConfig(smd=SMDConfig(True), slu=SLUConfig(True, alpha=0.01),
+                       psg=PSGConfig(True, swa=False))
+    tcfg = TrainConfig(lr=0.03, optimizer="psg", total_steps=30,
+                       schedule="constant", weight_decay=5e-4)
+    task = GaussianImageTask(num_classes=10, snr=2.0)
+    params = R.init_resnet(jax.random.PRNGKey(0), 14, 10, e2)
+    opt = make_optimizer(tcfg)
+    opt_state = opt.init(params)
+
+    from repro.core import psg as psgmod
+
+    @jax.jit
+    def step(params, opt_state, batch, i):
+        def loss_fn(p):
+            with psgmod.enable(e2.psg):
+                return R.resnet_loss(p, batch, 14, e2,
+                                     jax.random.fold_in(jax.random.PRNGKey(1), i))
+        (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params2, opt2 = opt.apply(params, g, opt_state, i)
+        return params2, opt2, l
+
+    losses = []
+    for i in range(30):
+        batch = make_image_batch(task, 0, i, 0, 16)
+        params, opt_state, l = step(params, opt_state, batch, jnp.int32(i))
+        losses.append(float(l))
+    assert losses[-1] < losses[0], losses[:3] + losses[-3:]
+    assert np.isfinite(losses).all()
