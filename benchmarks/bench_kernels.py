@@ -1,6 +1,11 @@
 """Kernel microbenchmarks: PSG pallas kernel vs jnp reference (interpret
 mode on CPU — wall time is NOT TPU-representative; the derived column
-reports the energy-model MAC ratio, which is the quantity of record)."""
+reports the energy-model MAC ratio, which is the quantity of record).
+
+The oracle-vs-kernel rows sweep the actual ResNet-74 im2col shapes from
+``configs/paper_cnns.py`` — the geometry the PSG backward sees in
+paper-faithful training — and report the measured fallback-tile ratio per
+shape (the input to ``core/energy.measured_psg_factor``)."""
 from __future__ import annotations
 
 import time
@@ -9,20 +14,24 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
+from repro.configs.paper_cnns import resnet_im2col_shapes
 from repro.core.config import PSGConfig
 from repro.core.energy import FP32_MAC_PJ, mac_energy_pj
-from repro.core.psg import psg_grad_w_ref
-from repro.kernels import ops
+from repro.kernels import dispatch
+from repro.kernels.ref import psg_grad_w_ref
 
 from benchmarks.common import csv_row
 
 
 def _time(fn, *args, reps=3):
-    fn(*args)  # compile
+    """(us_per_call, last_result) — the result is returned so callers don't
+    re-execute the (interpret-mode, expensive) kernel just to read it."""
+    out = fn(*args)  # compile
     t0 = time.perf_counter()
     for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
 
 
 def run(fast: bool = True) -> List[str]:
@@ -32,13 +41,29 @@ def run(fast: bool = True) -> List[str]:
     x = jax.random.normal(k1, (N, din))
     gy = jax.random.normal(k2, (N, dout)) * 0.01
     rows = []
-    us_k = _time(lambda a, b: ops.psg_grad_w(a, b, cfg), x, gy)
-    us_r = _time(lambda a, b: psg_grad_w_ref(a, b, cfg), x, gy)
+    us_k, _ = _time(lambda a, b: dispatch.psg_grad_w(a, b, cfg), x, gy)
+    us_r, _ = _time(lambda a, b: psg_grad_w_ref(a, b, cfg), x, gy)
     pred_mac = mac_energy_pj(cfg.bits_x_msb, cfg.bits_g_msb) / FP32_MAC_PJ
     rows.append(csv_row("kernel/psg_pallas", us_k,
                         f"ref_us={us_r:.1f};pred_mac_vs_fp32={pred_mac:.4f}"))
-    us_q = _time(lambda a: ops.quantize(a, 8), x)
+    us_q, _ = _time(lambda a: dispatch.quantize(a, 8), x)
     rows.append(csv_row("kernel/quantize", us_q, "bits=8"))
+
+    # oracle vs tile kernel on ResNet-74 im2col geometry (batch reduced for
+    # the CPU interpreter; din/dout/k-structure are the paper's)
+    batch = 2 if fast else 16
+    shapes = resnet_im2col_shapes(depth=74, width=16, batch=batch)
+    shapes = shapes[:3] if fast else shapes
+    for (Ns, din, dout) in shapes:
+        kk1, kk2 = jax.random.split(jax.random.PRNGKey(Ns + din))
+        xs = jax.random.normal(kk1, (Ns, din))
+        gs = jax.random.normal(kk2, (Ns, dout)) * 0.01
+        us_tile, (_, fb) = _time(
+            lambda a, b: dispatch.psg_grad_w(a, b, cfg), xs, gs)
+        us_ref, _ = _time(lambda a, b: psg_grad_w_ref(a, b, cfg), xs, gs)
+        rows.append(csv_row(
+            f"kernel/psg_resnet74_im2col/{Ns}x{din}x{dout}", us_tile,
+            f"ref_us={us_ref:.1f};fallback_tile_ratio={float(fb):.3f}"))
 
     # flash attention vs unfused oracle (interpret mode; derived column
     # reports the HBM-traffic ratio O(S*d)/O(S*T) that matters on TPU)
@@ -49,9 +74,9 @@ def run(fast: bool = True) -> List[str]:
     q = jax.random.normal(ks[0], (B, S, nh, hd))
     kk = jax.random.normal(ks[1], (B, S, nh, hd))
     vv = jax.random.normal(ks[2], (B, S, nh, hd))
-    us_f = _time(lambda a, b, c: flash_attention(a, b, c, bq=128, bk=128),
-                 q, kk, vv)
-    us_o = _time(flash_attention_oracle, q, kk, vv)
+    us_f, _ = _time(lambda a, b, c: flash_attention(a, b, c, bq=128, bk=128),
+                    q, kk, vv)
+    us_o, _ = _time(flash_attention_oracle, q, kk, vv)
     rows.append(csv_row("kernel/flash_attn", us_f,
                         f"oracle_us={us_o:.1f};hbm_ratio={hd/S:.4f}"))
     return rows

@@ -1,6 +1,7 @@
 """The paper's own backbones: ResNet-74, ResNet-110, MobileNetV2 on
 CIFAR-10/100 (§4.1) — the faithful-reproduction path."""
 from dataclasses import dataclass
+from typing import List, Tuple
 
 from repro.core.config import E2TrainConfig, TrainConfig
 
@@ -33,3 +34,35 @@ def mobilenetv2(num_classes: int = 10, e2: E2TrainConfig = None) -> CNNExperimen
                          TrainConfig(global_batch=128, lr=0.05,
                                      total_steps=64000, optimizer="sgdm"),
                          e2 or E2TrainConfig())
+
+
+def resnet_im2col_shapes(depth: int = 74, width: int = 16, batch: int = 128,
+                         image: int = 32) -> List[Tuple[int, int, int]]:
+    """Distinct (N, din, dout) im2col matmul shapes of a CIFAR ResNet.
+
+    These are exactly the operand shapes ``models/resnet.conv2d`` hands to
+    ``psg.matmul`` — i.e. the shapes the PSG backward tile kernel sees
+    during paper-faithful training (N = B*H'*W', din = k*k*Cin, dout =
+    Cout).  Used by benchmarks/bench_kernels.py to compare the element-level
+    oracle against the tile kernel on real workload geometry.
+    """
+    n = (depth - 2) // 6
+    shapes: List[Tuple[int, int, int]] = [(batch * image * image, 9 * 3, width)]
+    H, cin = image, width
+    for stage, cout in enumerate((width, 2 * width, 4 * width)):
+        for b in range(n):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            H = H // stride
+            shapes.append((batch * H * H, 9 * (cin if b == 0 else cout), cout))
+            shapes.append((batch * H * H, 9 * cout, cout))
+            if b == 0 and cin != cout:
+                # 1x1 projection shortcut (models/resnet.py "downs"):
+                # im2col din is just cin for k=1
+                shapes.append((batch * H * H, cin, cout))
+            cin = cout
+    seen, uniq = set(), []
+    for s in shapes:
+        if s not in seen:
+            seen.add(s)
+            uniq.append(s)
+    return uniq

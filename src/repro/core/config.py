@@ -229,6 +229,13 @@ class PSGConfig:
     swa: bool = True                  # stochastic weight averaging (paper uses SWA)
     swa_start_frac: float = 0.5
     majority_vote: bool = False       # beyond-paper: 1-bit sign all-reduce
+    # kernel backend for the PSG backward: "auto" defers to the dispatch
+    # layer's platform probe; "reference" | "interpret" | "mosaic" pin it
+    # per-experiment (DESIGN.md §Dispatch).
+    backend: str = "auto"
+    # FSDP all-gather of the weight on int8 codes instead of bf16 (replaces
+    # the retired REPRO_PSG_INT8_GATHER trace-time env read).
+    int8_gather: bool = False
 
 
 @dataclass(frozen=True)

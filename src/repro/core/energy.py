@@ -184,16 +184,38 @@ def computational_savings(smd_ratio: float, slu_skip: float,
     return 1.0 - smd_ratio * (1.0 - slu_skip) * psg_factor
 
 
+# Design-point fallback rate assumed when no measurement is available; the
+# training path now *measures* the true tile-level rate per step (the
+# backward kernel's fallback-tile stats surface as the train-step metric
+# ``psg_fallback_ratio`` — see core/psg.py and training/train_step.py) and
+# callers should pass that measurement in.
+PSG_FALLBACK_ASSUMED = 0.4
+
+
+def measured_psg_factor(e2: E2TrainConfig, fallback_ratio: float) -> float:
+    """PSG compute-energy factor from a *measured* fallback-tile ratio."""
+    p = e2.psg
+    return psg_factor_from_energy_model(
+        (p.bits_x, p.bits_g, p.bits_x_msb, p.bits_g_msb), fallback_ratio)
+
+
 def training_energy_pj(cfg: ModelConfig, batch: int, S: int,
                        e2: E2TrainConfig, steps: int,
-                       bits_default: int = 32) -> float:
-    """End-to-end training energy under the 45nm model (compute + movement)."""
+                       bits_default: int = 32,
+                       psg_fallback_rate: float = PSG_FALLBACK_ASSUMED
+                       ) -> float:
+    """End-to-end training energy under the 45nm model (compute + movement).
+
+    ``psg_fallback_rate``: fraction of backward weight-gradient compute that
+    ran the full-precision product — pass ``Trainer.measured_psg_fallback()``
+    for measured-rather-than-assumed accounting.
+    """
     macs = train_step_flops(cfg, batch, S) / 2.0
     if e2.psg.enabled:
         fwd = mac_energy_pj(e2.psg.bits_x, e2.psg.bits_x)
         bwd_x = mac_energy_pj(e2.psg.bits_g, e2.psg.bits_x)
         bwd_w = mac_energy_pj(e2.psg.bits_x_msb, e2.psg.bits_g_msb) \
-            + 0.4 * mac_energy_pj(e2.psg.bits_x, e2.psg.bits_g)
+            + psg_fallback_rate * mac_energy_pj(e2.psg.bits_x, e2.psg.bits_g)
         mac_pj = (fwd + bwd_x + bwd_w) / 3.0
         move_bits = e2.psg.bits_x
     else:

@@ -11,14 +11,21 @@ magnitude is below an adaptive threshold ``tau = beta * max|g_w_msb|``
 (Eq. 2).  The failure probability decays exponentially in predictor
 precision (Eq. 3).
 
-TPU adaptation (DESIGN.md §3.2): the paper's predictor reuses MSBs inside a
-bit-serial MAC — a circuit trick with no TPU analogue.  Here the predictor
-is an int8xint8 MXU matmul of the quantized operands (int ops run at >=2x
-bf16 peak on v5e) and the *fallback* is tile-level inside the Pallas kernel
-(``repro.kernels.psg_matmul``) rather than element-level, because the MXU is
-dense.  This module holds the pure-jnp element-level reference semantics
-(the oracle the kernel is tested against) and the ``custom_vjp`` integration
-that routes model matmuls through PSG at trace time.
+TPU adaptation (DESIGN.md §Dispatch): the paper's predictor reuses MSBs
+inside a bit-serial MAC — a circuit trick with no TPU analogue.  Here the
+predictor is an int8xint8 MXU matmul of the quantized operands (int ops run
+at >=2x bf16 peak on v5e) and the *fallback* is tile-level inside the Pallas
+kernel (``repro.kernels.psg_matmul``) rather than element-level, because the
+MXU is dense.  The ``custom_vjp`` backward below routes the weight gradient
+through that tile kernel via ``repro.kernels.dispatch`` — the element-level
+reference now lives in ``repro.kernels.ref`` and is test-only.
+
+The backward also *measures* how often tiles fell back to the full product
+and reports it as the gradient of a probe input (see :func:`enable` /
+:func:`probe_fallback_ratio`): cotangents of a shared probe accumulate
+across every PSG matmul in the model, so one extra ``grad`` argument yields
+the per-step MAC-weighted fallback ratio that drives ``core/energy.py`` —
+measured, not assumed, predictor usage.
 
 Mixed precision follows the paper (after [Banner et al. 2018]): activations/
 weights at ``bits_x`` (8), output-gradients at ``bits_g`` (16) — gradients
@@ -34,81 +41,44 @@ from __future__ import annotations
 import contextlib
 import threading
 from functools import partial
-from typing import Any, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.config import PSGConfig
+from repro.core.quant import msb_of, quantize, quantize_int
+from repro.kernels import dispatch
+from repro.kernels.ref import (predictor_confidence_ref,  # test-only oracle
+                               psg_grad_w_ref)            # (re-exports)
 
-# ---------------------------------------------------------------------------
-# quantization primitives
-# ---------------------------------------------------------------------------
-
-
-def qscale(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
-    """Symmetric per-tensor (or per-axis) scale: max|x| / (2^(b-1) - 1)."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=axis is not None)
-    return jnp.maximum(amax, 1e-12) / (2.0 ** (bits - 1) - 1.0)
-
-
-def quantize(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
-    """Fake-quantize: round to a ``bits``-bit symmetric fixed-point grid."""
-    s = qscale(x, bits, axis)
-    q = jnp.round(x.astype(jnp.float32) / s)
-    lim = 2.0 ** (bits - 1) - 1.0
-    return (jnp.clip(q, -lim, lim) * s).astype(x.dtype)
+# (PROBE_FALLBACK_MACS, PROBE_TOTAL_MACS) slots of the probe vector: each
+# PSG matmul's backward contributes [fallback_ratio * macs, macs], so the
+# accumulated ratio is MAC-weighted — a tiny all-fallback layer cannot
+# swamp a huge mostly-predicted one (the energy model charges MACs, so
+# MACs are the right weight).
+PROBE_SIZE = 2
 
 
-def quantize_int(x: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Integer codes + scale (used by the Pallas kernel path)."""
-    s = qscale(x, bits)
-    lim = 2.0 ** (bits - 1) - 1.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -lim, lim)
-    dt = jnp.int8 if bits <= 8 else jnp.int32 if bits > 16 else jnp.int16
-    return q.astype(dt), s
+def zero_probe() -> jnp.ndarray:
+    return jnp.zeros((PROBE_SIZE,), jnp.float32)
 
 
-def msb_of(x: jnp.ndarray, bits_full: int, bits_msb: int) -> jnp.ndarray:
-    """Keep the ``bits_msb`` most significant bits of a ``bits_full`` code.
-
-    On the fixed-point grid of ``bits_full`` this means re-rounding onto the
-    coarser ``bits_msb`` grid *with the same dynamic range* — exactly the
-    paper's MSB-part operand (quantization step Delta = 2^-(B_msb - 1) on a
-    [-1, 1]-normalized range).
-    """
-    return quantize(x, bits_msb)
+def probe_fallback_ratio(probe_grad: jnp.ndarray) -> jnp.ndarray:
+    """MAC-weighted measured fallback ratio from a probe cotangent."""
+    return probe_grad[0] / jnp.maximum(probe_grad[1], 1.0)
 
 
 # ---------------------------------------------------------------------------
-# reference (element-level) PSG weight-gradient — the oracle
+# element-level reference statistics (kept here: they are *analysis* tools,
+# not kernels — tests and notebooks call them through this module)
 # ---------------------------------------------------------------------------
-
-
-def psg_grad_w_ref(x2: jnp.ndarray, gy2: jnp.ndarray, cfg: PSGConfig
-                   ) -> jnp.ndarray:
-    """Element-level Eq. (2).  x2: (N, din), gy2: (N, dout) -> (din, dout).
-
-    Returns the sign-valued weight gradient in {-1, 0, +1} (float32).
-    """
-    xq = quantize(x2, cfg.bits_x)
-    gq = quantize(gy2, cfg.bits_g)
-    xm = msb_of(x2, cfg.bits_x, cfg.bits_x_msb)
-    gm = msb_of(gy2, cfg.bits_g, cfg.bits_g_msb)
-    g_msb = xm.astype(jnp.float32).T @ gm.astype(jnp.float32)
-    g_full = xq.astype(jnp.float32).T @ gq.astype(jnp.float32)
-    tau = cfg.beta * jnp.max(jnp.abs(g_msb))
-    pred_ok = jnp.abs(g_msb) >= tau
-    return jnp.where(pred_ok, jnp.sign(g_msb), jnp.sign(g_full))
 
 
 def psg_predictor_usage(x2, gy2, cfg: PSGConfig) -> jnp.ndarray:
     """Fraction of weight-grad entries decided by the MSB predictor."""
-    xm = msb_of(x2, cfg.bits_x, cfg.bits_x_msb)
-    gm = msb_of(gy2, cfg.bits_g, cfg.bits_g_msb)
-    g_msb = xm.astype(jnp.float32).T @ gm.astype(jnp.float32)
-    tau = cfg.beta * jnp.max(jnp.abs(g_msb))
-    return jnp.mean((jnp.abs(g_msb) >= tau).astype(jnp.float32))
+    _, pred_ok = predictor_confidence_ref(x2, gy2, cfg)
+    return jnp.mean(pred_ok.astype(jnp.float32))
 
 
 def prediction_error_bound(x2, gy2, cfg: PSGConfig) -> jnp.ndarray:
@@ -126,24 +96,28 @@ def prediction_error_bound(x2, gy2, cfg: PSGConfig) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# custom_vjp matmul with PSG backward
+# custom_vjp matmul with PSG backward (tile-level kernel via dispatch)
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2,))
-def psg_matmul(x2: jnp.ndarray, w: jnp.ndarray, cfg: PSGConfig) -> jnp.ndarray:
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _psg_matmul(x2: jnp.ndarray, w: jnp.ndarray, probe: jnp.ndarray,
+                cfg: PSGConfig) -> jnp.ndarray:
     """(N, din) @ (din, dout) with PSG semantics.
 
     Forward runs on the ``bits_x`` fixed-point grid (the mixed-precision
-    training regime of [15] the paper adopts).  The weight is quantized to
-    *integer codes on its FSDP shard* and explicitly replicated before
-    dequantization — placing the FSDP all-gather on int8 bytes (2x less
-    wire traffic than bf16; the paper's §3.3 low-precision data-movement
-    saving applied to the collective term).
+    training regime of [15] the paper adopts).  With ``cfg.int8_gather`` the
+    weight is quantized to *integer codes on its FSDP shard* and explicitly
+    replicated before dequantization — placing the FSDP all-gather on int8
+    bytes (2x less wire traffic than bf16; the paper's §3.3 low-precision
+    data-movement saving applied to the collective term).
+
+    ``probe`` is a zeros((2,)) carrier whose cotangent reports
+    [fallback_ratio * macs, macs] from the backward kernel — see module
+    docstring.
     """
-    import os
     xq = quantize(x2, cfg.bits_x)
-    if os.environ.get("REPRO_PSG_INT8_GATHER", "0") == "1":
+    if cfg.int8_gather:
         from repro.distributed.sharding import replicate
         codes, s = quantize_int(w, cfg.bits_x)
         codes = replicate(codes)              # int8 on the wire
@@ -153,8 +127,8 @@ def psg_matmul(x2: jnp.ndarray, w: jnp.ndarray, cfg: PSGConfig) -> jnp.ndarray:
     return xq @ wq
 
 
-def _psg_fwd(x2, w, cfg):
-    return psg_matmul(x2, w, cfg), (x2, w)
+def _psg_fwd(x2, w, probe, cfg):
+    return _psg_matmul(x2, w, probe, cfg), (x2, w)
 
 
 def _psg_bwd(cfg, res, gy):
@@ -162,11 +136,22 @@ def _psg_bwd(cfg, res, gy):
     gq = quantize(gy, cfg.bits_g)
     wq = quantize(w, cfg.bits_x)
     dx = (gq @ wq.T.astype(gq.dtype)).astype(x2.dtype)
-    dw = psg_grad_w_ref(x2, gy, cfg).astype(w.dtype)
-    return dx, dw
+    # weight gradient: tile-level Eq. (2) through the kernel dispatch layer
+    # (Pallas interpret on CPU, Mosaic on TPU, element-level oracle only
+    # when explicitly pinned to the reference backend).
+    sign, fallback = dispatch.psg_grad_w(x2, gy, cfg)
+    dw = sign.astype(w.dtype)
+    macs = jnp.float32(x2.shape[0]) * x2.shape[1] * gy.shape[1]
+    dprobe = jnp.stack([fallback * macs, macs])
+    return dx, dw, dprobe
 
 
-psg_matmul.defvjp(_psg_fwd, _psg_bwd)
+_psg_matmul.defvjp(_psg_fwd, _psg_bwd)
+
+
+def psg_matmul(x2: jnp.ndarray, w: jnp.ndarray, cfg: PSGConfig) -> jnp.ndarray:
+    """Public PSG matmul; picks up the active stats probe (if any)."""
+    return _psg_matmul(x2, w, _current_probe(), cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -181,15 +166,29 @@ def active_config() -> Optional[PSGConfig]:
     return cfg if (cfg is not None and cfg.enabled) else None
 
 
+def _current_probe() -> jnp.ndarray:
+    probe = getattr(_state, "probe", None)
+    return probe if probe is not None else zero_probe()
+
+
 @contextlib.contextmanager
-def enable(cfg: Optional[PSGConfig]):
-    """Route model matmuls through PSG while tracing under this context."""
+def enable(cfg: Optional[PSGConfig], probe: Optional[jnp.ndarray] = None):
+    """Route model matmuls through PSG while tracing under this context.
+
+    ``probe``: an optional zeros((2,)) array threaded into every PSG matmul;
+    differentiate the enclosing loss w.r.t. it to read the accumulated
+    [sum of fallback_ratio * macs, sum of macs] — the measured MAC-weighted
+    per-step ``psg_fallback_ratio`` (see training/train_step.py).
+    """
     prev = getattr(_state, "cfg", None)
+    prev_probe = getattr(_state, "probe", None)
     _state.cfg = cfg
+    _state.probe = probe
     try:
         yield
     finally:
         _state.cfg = prev
+        _state.probe = prev_probe
 
 
 def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,49 @@
+"""Symmetric fixed-point quantization primitives shared by PSG and kernels.
+
+These are the grid definitions everything else agrees on: the element-level
+PSG reference (``kernels/ref.py``), the tile-level Pallas kernels
+(``kernels/psg_matmul.py`` via ``kernels/ops.py``), and the ``custom_vjp``
+integration (``core/psg.py``).  They live in their own leaf module so the
+kernel package never has to import ``core.psg`` (which imports the kernel
+dispatch layer for its backward pass — see DESIGN.md §Dispatch).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def qscale(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    """Symmetric per-tensor (or per-axis) scale: max|x| / (2^(b-1) - 1)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                   keepdims=axis is not None)
+    return jnp.maximum(amax, 1e-12) / (2.0 ** (bits - 1) - 1.0)
+
+
+def quantize(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    """Fake-quantize: round to a ``bits``-bit symmetric fixed-point grid."""
+    s = qscale(x, bits, axis)
+    q = jnp.round(x.astype(jnp.float32) / s)
+    lim = 2.0 ** (bits - 1) - 1.0
+    return (jnp.clip(q, -lim, lim) * s).astype(x.dtype)
+
+
+def quantize_int(x: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Integer codes + scale (used by the Pallas kernel path)."""
+    s = qscale(x, bits)
+    lim = 2.0 ** (bits - 1) - 1.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -lim, lim)
+    dt = jnp.int8 if bits <= 8 else jnp.int32 if bits > 16 else jnp.int16
+    return q.astype(dt), s
+
+
+def msb_of(x: jnp.ndarray, bits_full: int, bits_msb: int) -> jnp.ndarray:
+    """Keep the ``bits_msb`` most significant bits of a ``bits_full`` code.
+
+    On the fixed-point grid of ``bits_full`` this means re-rounding onto the
+    coarser ``bits_msb`` grid *with the same dynamic range* — exactly the
+    paper's MSB-part operand (quantization step Delta = 2^-(B_msb - 1) on a
+    [-1, 1]-normalized range).
+    """
+    return quantize(x, bits_msb)

@@ -23,6 +23,20 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+
+def make_abstract_mesh(shape, axes):
+    """Device-free mesh for spec logic (tests, shape-only planning).
+
+    Current JAX's ``AbstractMesh`` takes ``((name, size), ...)`` pairs;
+    older releases took ``(shape_tuple, axis_names)`` positionally.  Accept
+    the classic ``(shape, axes)`` call and translate.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:        # pre-pairs API
+        return AbstractMesh(tuple(shape), tuple(axes))
+
 # ---------------------------------------------------------------------------
 # activation-sharding hints (trace-time context, like core.psg.enable)
 # ---------------------------------------------------------------------------

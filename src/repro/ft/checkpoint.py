@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import threading
 import time
 from typing import Any, Dict, Optional, Tuple
@@ -80,9 +81,11 @@ def wait_for_saves():
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(f[len("step_"):-len(".npz")])
-             for f in os.listdir(ckpt_dir)
-             if f.startswith("step_") and f.endswith(".npz")]
+    # strict match: in-flight async writes park as
+    # step_XXXXXXXX.npz.<pid>.<tid>.tmp.npz (np.savez forces the .npz
+    # suffix), which a loose endswith(".npz") filter would parse as a step
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             for m in [re.fullmatch(r"step_(\d+)\.npz", f)] if m]
     return max(steps) if steps else None
 
 

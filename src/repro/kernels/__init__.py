@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+Layout (DESIGN.md §Dispatch):
+
+* ``dispatch.py`` — backend selection (reference / interpret / mosaic);
+  the only entry point model/training code should use.
+* ``ops.py``      — jit'd wrappers over the raw kernels.
+* ``psg_matmul.py`` / ``quant.py`` / ``flash_attn.py`` — kernel bodies.
+* ``ref.py``      — pure-jnp oracles (test-only semantics anchors).
+"""

@@ -1,0 +1,148 @@
+"""Kernel backend dispatch — the ONE place that picks how a kernel runs.
+
+Every PSG/quantization op can execute on one of three backends
+(DESIGN.md §Dispatch):
+
+* ``"reference"`` — the element-level pure-jnp oracle (``kernels/ref.py``).
+  Test-only semantics anchor; also the safety hatch for platforms where the
+  Pallas interpreter misbehaves.
+* ``"interpret"`` — the tile-level Pallas kernel executed by the Pallas
+  interpreter (CPU containers, debugging).  Same tile semantics and the same
+  fallback-tile statistics as the compiled path.
+* ``"mosaic"`` — the tile-level kernel lowered through Mosaic on a real TPU.
+
+Selection order, strongest first:
+
+1. an active :func:`override_backend` context (tests, benchmarks);
+2. ``PSGConfig.backend`` when it is not ``"auto"`` (per-experiment pin);
+3. the process default: ``REPRO_KERNEL_BACKEND`` if set — read ONCE at
+   import, never at trace time — else a platform probe
+   (``jax.default_backend() == "tpu"`` -> mosaic, else interpret).
+
+This retires the scattered environment reads the seed repo had
+(``REPRO_PALLAS_COMPILE`` at ``kernels/ops.py`` import, and
+``REPRO_PSG_INT8_GATHER`` *inside the traced forward* of
+``core/psg.psg_matmul`` — an env read baked into whichever jit cache entry
+traced first).  No environment variable is consulted inside jitted code.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import PSGConfig
+from repro.kernels import ops, ref
+
+BACKEND_REFERENCE = "reference"
+BACKEND_INTERPRET = "interpret"
+BACKEND_MOSAIC = "mosaic"
+BACKENDS = (BACKEND_REFERENCE, BACKEND_INTERPRET, BACKEND_MOSAIC)
+
+# retired trace-time env vars; kept as names only so DESIGN.md and the
+# migration error message below can point at them.
+RETIRED_ENV_VARS = ("REPRO_PALLAS_COMPILE", "REPRO_PSG_INT8_GATHER")
+
+_ENV_DEFAULT = os.environ.get("REPRO_KERNEL_BACKEND", "").strip().lower()
+
+_state = threading.local()
+_process_default: Optional[str] = None
+
+
+def _validate(name: str) -> str:
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {name!r}; expected one of {BACKENDS} "
+            f"(note: {', '.join(RETIRED_ENV_VARS)} are retired — use "
+            f"PSGConfig.backend or repro.kernels.dispatch)")
+    return name
+
+
+def platform_default() -> str:
+    """Probe the platform: compiled kernels on TPU, interpreter elsewhere."""
+    return BACKEND_MOSAIC if jax.default_backend() == "tpu" else BACKEND_INTERPRET
+
+
+def default_backend() -> str:
+    """Process-wide default (env pin at import time, else platform probe)."""
+    global _process_default
+    if _process_default is None:
+        _process_default = _validate(_ENV_DEFAULT) if _ENV_DEFAULT \
+            else platform_default()
+    return _process_default
+
+
+def set_default_backend(name: Optional[str]) -> None:
+    """Pin (or with ``None`` re-probe) the process-wide default."""
+    global _process_default
+    _process_default = _validate(name) if name is not None else None
+
+
+@contextlib.contextmanager
+def override_backend(name: str):
+    """Force a backend for ops *traced* under this context (tests/benches).
+
+    Trace-time only: like every non-argument selection path, it cannot be
+    part of a jit cache key.  A function traced inside the context keeps the
+    overridden backend for the lifetime of its cache entry, and a function
+    already traced outside ignores the override entirely.  Use it around
+    fresh traces (``jax.jit(f).lower(...)``, first call of a new function);
+    to pin the backend of long-lived jitted train steps, set
+    ``PSGConfig.backend`` — the config is a static jit argument, so the
+    cache does the right thing.
+    """
+    _validate(name)
+    prev = getattr(_state, "override", None)
+    _state.override = name
+    try:
+        yield
+    finally:
+        _state.override = prev
+
+
+def resolve_backend(cfg: Optional[PSGConfig] = None) -> str:
+    """The backend an op traced right now should use."""
+    override = getattr(_state, "override", None)
+    if override is not None:
+        return override
+    if cfg is not None and cfg.backend != "auto":
+        return _validate(cfg.backend)
+    return default_backend()
+
+
+# ---------------------------------------------------------------------------
+# dispatched ops — call these, not kernels.ops / kernels.ref directly
+# ---------------------------------------------------------------------------
+
+
+def psg_grad_w(x2: jnp.ndarray, gy2: jnp.ndarray, cfg: PSGConfig
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """PSG weight-gradient sign + measured fallback ratio.
+
+    Tile-level Pallas kernel on the interpret/mosaic backends (fallback
+    ratio = fraction of output tiles that ran the full product); element
+    level on the reference backend (fallback ratio = fraction of entries
+    below the confidence threshold).  Both are in [0, 1] and feed the same
+    energy model (``core/energy.py``).
+    """
+    backend = resolve_backend(cfg)
+    xf = x2.astype(jnp.float32)
+    gf = gy2.astype(jnp.float32)
+    if backend == BACKEND_REFERENCE:
+        return (ref.psg_grad_w_ref(xf, gf, cfg),
+                ref.psg_fallback_ratio_ref(xf, gf, cfg))
+    return ops.psg_grad_w(xf, gf, cfg,
+                          interpret=backend != BACKEND_MOSAIC)
+
+
+def quantize(x: jnp.ndarray, bits: int,
+             cfg: Optional[PSGConfig] = None) -> jnp.ndarray:
+    """Fake-quantize through the backend the context resolves to."""
+    backend = resolve_backend(cfg)
+    if backend == BACKEND_REFERENCE:
+        return ref.quantize_ref(x, bits)
+    return ops.quantize(x, bits, interpret=backend != BACKEND_MOSAIC)

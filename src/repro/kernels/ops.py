@@ -1,17 +1,19 @@
-"""jit'd wrappers over the Pallas kernels — the public kernel API.
+"""jit'd wrappers over the Pallas kernels — the raw kernel entry points.
 
 ``psg_grad_w(x, gy, cfg)`` is the drop-in tile-level replacement for the
-element-level ``repro.core.psg.psg_grad_w_ref`` oracle; outputs are
+element-level ``repro.kernels.ref.psg_grad_w_ref`` oracle; outputs are
 value-identical (the tile granularity only changes the *energy accounting*,
 reported via the returned fallback-tile ratio).
 
-On this CPU container kernels run with ``interpret=True`` (the kernel body
-executed in Python) — on a real TPU set ``REPRO_PALLAS_COMPILE=1`` to lower
-them through Mosaic.
+Backend selection (reference vs. Pallas-interpret vs. Mosaic-compiled) is
+owned by ``repro.kernels.dispatch`` — model and training code should call
+the dispatch layer, not this module (DESIGN.md §Dispatch).  The ``interpret``
+flag here is a plain argument: on this CPU container the dispatch layer
+passes ``True`` (kernel body executed by the Pallas interpreter); on a real
+TPU it resolves to ``False`` and the kernels lower through Mosaic.
 """
 from __future__ import annotations
 
-import os
 from functools import partial
 from typing import Tuple
 
@@ -19,11 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import PSGConfig
-from repro.core.psg import qscale
+from repro.core.quant import qscale
 from repro.kernels import psg_matmul as _pm
 from repro.kernels import quant as _q
-
-INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
 
 def _codes(x: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -37,7 +37,7 @@ def _codes(x: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 @partial(jax.jit, static_argnames=("cfg", "interpret"))
 def psg_grad_w(x2: jnp.ndarray, gy2: jnp.ndarray, cfg: PSGConfig,
-               interpret: bool = INTERPRET
+               interpret: bool = True
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Tile-level PSG weight gradient.
 
@@ -65,6 +65,6 @@ def psg_grad_w(x2: jnp.ndarray, gy2: jnp.ndarray, cfg: PSGConfig,
 
 
 @partial(jax.jit, static_argnames=("bits", "interpret"))
-def quantize(x: jnp.ndarray, bits: int, interpret: bool = INTERPRET
+def quantize(x: jnp.ndarray, bits: int, interpret: bool = True
              ) -> jnp.ndarray:
     return _q.quantize_pallas(x, bits, interpret=interpret)

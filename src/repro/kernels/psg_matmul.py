@@ -1,5 +1,11 @@
 """Pallas TPU kernel: tile-level Predictive Sign Gradient weight-gradient.
 
+This is the kernel the training backward pass actually executes: the
+``custom_vjp`` in ``core/psg.py`` routes every PSG weight gradient here
+through ``kernels/dispatch.py`` (backend selection rules in DESIGN.md
+§Dispatch), and the per-tile fallback stats it emits drive the measured
+energy accounting (``core/energy.py``).
+
 Computes ``sign_psg(x^T g_y)`` for a weight matmul's backward pass with the
 paper's Eq. (2) semantics, adapted to the TPU memory/compute hierarchy
 (DESIGN.md §3.2):

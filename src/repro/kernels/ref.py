@@ -1,7 +1,11 @@
 """Pure-jnp oracles for the Pallas kernels (the ``ref.py`` contract).
 
 Every kernel in this package is validated against these references in
-``tests/test_kernels.py`` over a shape/dtype sweep.
+``tests/test_kernels.py`` over a shape/dtype sweep.  Since the dispatch
+layer landed (DESIGN.md §Dispatch) the element-level PSG weight-gradient
+lives HERE, as a test-only reference: the training hot path runs the
+tile-level kernel (``kernels/ops.psg_grad_w``), and these oracles are what
+it is held accountable to.
 """
 from __future__ import annotations
 
@@ -9,12 +13,54 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import PSGConfig
-from repro.core.psg import msb_of, psg_grad_w_ref, quantize, quantize_int
+from repro.core.quant import msb_of, quantize, quantize_int
 
 
 def quantize_ref(x: jnp.ndarray, bits: int) -> jnp.ndarray:
     """Fake-quantization oracle (matches kernels/quant.py)."""
     return quantize(x, bits)
+
+
+def predictor_confidence_ref(x2: jnp.ndarray, gy2: jnp.ndarray,
+                             cfg: PSGConfig
+                             ) -> tuple:
+    """Eq. (2)'s predictor state, computed once: (g_msb, confident_mask).
+
+    The single definition of the MSB product + adaptive threshold
+    ``tau = beta * max|g_msb|`` — the sign oracle, the fallback-ratio
+    reference and ``core/psg.psg_predictor_usage`` all derive from this so
+    a threshold-rule change cannot desynchronize them.
+    """
+    xm = msb_of(x2, cfg.bits_x, cfg.bits_x_msb)
+    gm = msb_of(gy2, cfg.bits_g, cfg.bits_g_msb)
+    g_msb = xm.astype(jnp.float32).T @ gm.astype(jnp.float32)
+    tau = cfg.beta * jnp.max(jnp.abs(g_msb))
+    return g_msb, jnp.abs(g_msb) >= tau
+
+
+def psg_grad_w_ref(x2: jnp.ndarray, gy2: jnp.ndarray, cfg: PSGConfig
+                   ) -> jnp.ndarray:
+    """Element-level Eq. (2).  x2: (N, din), gy2: (N, dout) -> (din, dout).
+
+    Returns the sign-valued weight gradient in {-1, 0, +1} (float32).
+    The paper's rule: use sign(g_msb) where the MSB predictor's magnitude
+    clears the adaptive threshold; fall back to the sign of the full
+    fixed-point product elsewhere.
+    """
+    xq = quantize(x2, cfg.bits_x)
+    gq = quantize(gy2, cfg.bits_g)
+    g_full = xq.astype(jnp.float32).T @ gq.astype(jnp.float32)
+    g_msb, pred_ok = predictor_confidence_ref(x2, gy2, cfg)
+    return jnp.where(pred_ok, jnp.sign(g_msb), jnp.sign(g_full))
+
+
+def psg_fallback_ratio_ref(x2: jnp.ndarray, gy2: jnp.ndarray, cfg: PSGConfig
+                           ) -> jnp.ndarray:
+    """Element-level fallback fraction: entries the predictor could NOT
+    decide (the complement of the paper's §4.4 predictor-usage figure).
+    The tile-level kernel reports the analogous *tile* ratio."""
+    _, pred_ok = predictor_confidence_ref(x2, gy2, cfg)
+    return jnp.mean(jnp.logical_not(pred_ok).astype(jnp.float32))
 
 
 def psg_grad_w_oracle(x2: jnp.ndarray, gy2: jnp.ndarray, cfg: PSGConfig

@@ -90,8 +90,14 @@ class Computation:
         m = re.search(r"\s[\w\-\$]+\(([^)]*)\)", line)
         if not m:
             return []
-        names = []
-        for tok in m.group(1).split(","):
+        body = m.group(1)
+        # modern HLO writes typed operands — "dot(f32[32,64]{1,0} %lhs, ...)"
+        # — so %-prefixed names are authoritative when present
+        names = re.findall(r"%([\w.\-]+)", body)
+        if names:
+            return names
+        # legacy/untyped form: bare names separated by commas
+        for tok in body.split(","):
             tok = tok.strip()
             mm = re.match(r"%?([\w.\-]+)$", tok)
             if mm:
@@ -266,8 +272,15 @@ class HloCost:
             if " while(" in line:
                 mb = re.search(r"body=%?([\w.\-]+)", line)
                 mc = re.search(r"condition=%?([\w.\-]+)", line)
-                trips = _trip_count(self.comps[mc.group(1)]) \
-                    if mc and mc.group(1) in self.comps else 1
+                # post-optimization HLO annotates counted loops directly:
+                # backend_config={"known_trip_count":{"n":"8"}} — trust it
+                # over re-deriving the bound from the condition.
+                mkt = re.search(r"known_trip_count[^0-9]*?(\d+)", line)
+                if mkt:
+                    trips = int(mkt.group(1))
+                else:
+                    trips = _trip_count(self.comps[mc.group(1)]) \
+                        if mc and mc.group(1) in self.comps else 1
                 bf, bb, bc = self._comp_cost(mb.group(1)) if mb else (0, 0, 0)
                 # VMEM residency: loop-invariant small operands (recurrent
                 # weights etc.) stay in VMEM across iterations on TPU —

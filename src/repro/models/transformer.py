@@ -38,6 +38,27 @@ from repro.models.layers import (apply_norm, attention_decode, attention_fwd,
 Params = Dict[str, Any]
 
 
+# lax.optimization_barrier has no differentiation rule, so wrap it in a
+# custom_vjp identity that applies the barrier on BOTH passes: the forward
+# barrier keeps XLA from hoisting saved-residual upcasts out of the unit
+# scan, and the backward barrier does the same for the cotangent stream
+# (the bwd loop is where the +14 GiB fp32 copy was observed).
+@jax.custom_vjp
+def _grad_safe_barrier(x):
+    return lax.optimization_barrier(x)
+
+
+def _grad_safe_barrier_fwd(x):
+    return lax.optimization_barrier(x), None
+
+
+def _grad_safe_barrier_bwd(_, g):
+    return (lax.optimization_barrier(g),)
+
+
+_grad_safe_barrier.defvjp(_grad_safe_barrier_fwd, _grad_safe_barrier_bwd)
+
+
 class LMOutput(NamedTuple):
     logits: jnp.ndarray
     aux_loss: jnp.ndarray          # MoE load-balance loss
@@ -289,7 +310,7 @@ def lm_fwd(p: Params, tokens: jnp.ndarray, cfg: ModelConfig,
         # barrier: stops XLA from hoisting the bwd loop's bf16->f32 upcast of
         # the saved-residual stack out of the loop (a full-size fp32 copy of
         # all saved activations — observed +14 GiB on deepseek train_4k).
-        x = lax.optimization_barrier(x)
+        x = _grad_safe_barrier(x)
         x = hint(x, *stream_axes)  # re-pin stream sharding inside the body
         up = scanned["unit"]
         idx = scanned["idx"]

@@ -50,31 +50,39 @@ def make_train_step(exp: Experiment):
     psg_cfg = e2.psg if e2.psg.enabled else None
     m = max(tc.microbatches, 1)
 
-    def loss_fn(params, batch, rng):
-        with psgmod.enable(psg_cfg):
+    def loss_fn(params, probe, batch, rng):
+        # probe: zeros((2,)) carrier — its gradient accumulates the tile
+        # kernel's [sum fallback_ratio, n_psg_matmuls] across the whole
+        # backward pass (core/psg.py), giving the measured per-step
+        # psg_fallback_ratio without a side channel.
+        with psgmod.enable(psg_cfg, probe=probe):
             return transformer.lm_loss(params, batch, cfg, e2, rng,
                                        remat=tc.remat)
+
+    grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)
 
     def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]
                    ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
         rng = jax.random.fold_in(jax.random.PRNGKey(tc.seed), state.step)
+        probe0 = psgmod.zero_probe()
         if m == 1:
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(state.params, batch, rng)
+            (loss, metrics), (grads, probe_g) = grad_fn(
+                state.params, probe0, batch, rng)
             grads = constrain_like_params(grads)
         else:
             def micro(carry, mb):
-                g_acc, i = carry
-                (l, mt), g = jax.value_and_grad(loss_fn, has_aux=True)(
-                    state.params, mb, jax.random.fold_in(rng, i))
+                g_acc, p_acc, i = carry
+                (l, mt), (g, pg) = grad_fn(
+                    state.params, probe0, mb, jax.random.fold_in(rng, i))
                 g = constrain_like_params(g)
                 acc = constrain_like_params(jax.tree.map(jnp.add, g_acc, g))
-                return (acc, i + 1), (l, mt)
+                return (acc, p_acc + pg, i + 1), (l, mt)
 
             mbs = jax.tree.map(
                 lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch)
             g0 = jax.tree.map(jnp.zeros_like, state.params)
-            (grads, _), (losses, mets) = jax.lax.scan(micro, (g0, 0), mbs)
+            (grads, probe_g, _), (losses, mets) = jax.lax.scan(
+                micro, (g0, probe0, 0), mbs)
             grads = jax.tree.map(lambda g: g / m, grads)
             loss = jnp.mean(losses)
             metrics = jax.tree.map(jnp.mean, mets)
@@ -100,6 +108,12 @@ def make_train_step(exp: Experiment):
         metrics = dict(metrics)
         metrics["total_loss"] = loss
         metrics["grad_norm"] = gn
+        if psg_cfg is not None:
+            # measured (not assumed) predictor usage: MAC-weighted fraction
+            # of backward kernel tiles that ran the full-precision fallback
+            # product.  Only emitted when PSG ran — a baseline step has no
+            # measurement, not a measurement of zero.
+            metrics["psg_fallback_ratio"] = psgmod.probe_fallback_ratio(probe_g)
         return TrainState(params, opt_state, swa, state.step + 1), metrics
 
     return train_step

@@ -78,7 +78,21 @@ class Trainer:
                       f"({dt*1e3:.0f} ms)")
         if self.ckpt_dir:
             self._save(int(self.state.step) - 1)
+            # the final save must survive process exit: async writers are
+            # daemon threads, and an orphaned write leaves a stale .tmp
+            # (and no checkpoint) for the next --resume to trip over
+            from repro.ft.checkpoint import wait_for_saves
+            wait_for_saves()
         return self.history
+
+    def measured_psg_fallback(self) -> Optional[float]:
+        """Mean measured PSG fallback-tile ratio over executed steps — the
+        quantity core/energy.py uses in place of its 0.4 design assumption
+        (``training_energy_pj(psg_fallback_rate=...)``).  ``None`` when no
+        PSG step executed: no measurement is not a measurement of zero."""
+        vals = [h["psg_fallback_ratio"] for h in self.history
+                if "psg_fallback_ratio" in h]
+        return float(np.mean(vals)) if vals else None
 
     def _save(self, step: int):
         from repro.ft.checkpoint import save_checkpoint

@@ -10,8 +10,7 @@ from repro.launch.mesh import make_mesh
 
 def abstract_mesh(shape, axes):
     """Mesh stand-in for spec-logic tests (no devices needed)."""
-    from jax.sharding import AbstractMesh
-    return AbstractMesh(tuple(shape), tuple(axes))
+    return shd.make_abstract_mesh(shape, axes)
 
 
 def _spec(shape, rule, mesh, fsdp=True):

@@ -4,6 +4,7 @@ import dataclasses
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")   # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
