@@ -1,11 +1,14 @@
-"""End-to-end driver (deliverable b): train a ~100M-param LM for a few
-hundred steps with E²-Train, checkpointing + resume + SMD straggler policy.
+"""End-to-end driver (deliverable b): train with E²-Train for a few hundred
+steps, checkpointing + resume + SMD straggler policy, on either registered
+task — the ~100M-param LM or the paper's CIFAR ResNet.
 
     PYTHONPATH=src python examples/train_e2e.py --steps 200
     PYTHONPATH=src python examples/train_e2e.py --steps 300 --resume
+    PYTHONPATH=src python examples/train_e2e.py --task cifar_cnn --depth 14
 
 By default uses a ~100M-parameter llama-style config; --tiny shrinks it for
-fast CI runs.
+fast CI runs.  Both tasks run the SAME Trainer/train_step stack — the task
+registry (repro.tasks) supplies init/loss.
 """
 import argparse
 import os
@@ -15,9 +18,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
+from repro.configs.paper_cnns import cnn_model
 from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
                                PSGConfig, SLUConfig, SMDConfig, TrainConfig)
-from repro.data.synthetic import MarkovLMTask, make_lm_batch
+from repro.data.synthetic import (GaussianImageTask, MarkovLMTask,
+                                  make_image_batch, make_lm_batch)
 from repro.ft.checkpoint import latest_step, restore_checkpoint
 from repro.training.train_step import init_train_state
 from repro.training.trainer import Trainer
@@ -38,29 +43,48 @@ def model_tiny() -> ModelConfig:
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--task", choices=["lm", "cifar_cnn"], default="lm")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--ckpt", default="/tmp/e2train_ckpt")
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint dir (default: /tmp/e2train_ckpt_<task> "
+                         "— per task, so --resume never crosses tasks)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--depth", type=int, default=74,
+                    help="CIFAR ResNet depth (6n+2) for --task cifar_cnn")
     args = ap.parse_args()
+    if args.ckpt is None:
+        args.ckpt = f"/tmp/e2train_ckpt_{args.task}"
 
-    model = model_tiny() if args.tiny else model_100m()
-    print(f"model {model.name}: {model.param_count()/1e6:.1f}M params")
+    e2 = E2TrainConfig(smd=SMDConfig(enabled=True, drop_prob=0.5),
+                       slu=SLUConfig(enabled=True, alpha=1e-3),
+                       psg=PSGConfig(enabled=True))
+    tcfg = TrainConfig(global_batch=args.batch, seq_len=args.seq,
+                       lr=0.03, optimizer="psg", total_steps=args.steps,
+                       schedule="step", microbatches=1)
 
-    exp = Experiment(
-        model=model,
-        e2=E2TrainConfig(smd=SMDConfig(enabled=True, drop_prob=0.5),
-                         slu=SLUConfig(enabled=True, alpha=1e-3),
-                         psg=PSGConfig(enabled=True)),
-        train=TrainConfig(global_batch=args.batch, seq_len=args.seq,
-                          lr=0.03, optimizer="psg", total_steps=args.steps,
-                          schedule="step", microbatches=1))
-    task = MarkovLMTask(vocab=model.vocab_size)
+    if args.task == "cifar_cnn":
+        depth = 8 if args.tiny else args.depth     # --tiny shrinks both tasks
+        model = cnn_model(f"resnet{depth}", depth,
+                          width=8 if args.tiny else 16)
+        exp = Experiment(model=model, e2=e2, train=tcfg, task="cifar_cnn")
+        img_task = GaussianImageTask(num_classes=10, snr=2.0)
+        bayes = "n/a"
 
-    def make_batch(step, shard):
-        return make_lm_batch(task, 0, step, shard, args.batch, args.seq)
+        def make_batch(step, shard):
+            return make_image_batch(img_task, 0, step, shard, args.batch)
+        print(f"model {model.name} (CIFAR shapes, width {model.d_model})")
+    else:
+        model = model_tiny() if args.tiny else model_100m()
+        exp = Experiment(model=model, e2=e2, train=tcfg)
+        lm_task = MarkovLMTask(vocab=model.vocab_size)
+        bayes = f"{lm_task.bayes_xent():.3f}"
+
+        def make_batch(step, shard):
+            return make_lm_batch(lm_task, 0, step, shard, args.batch, args.seq)
+        print(f"model {model.name}: {model.param_count()/1e6:.1f}M params")
 
     state = init_train_state(jax.random.PRNGKey(0), exp)
     if args.resume and latest_step(args.ckpt) is not None:
@@ -72,10 +96,14 @@ def main():
                       checkpoint_every=50, deadline_s=30.0)
     hist = trainer.run(args.steps, log_every=10)
     if hist:
+        extras = ""
+        fb = trainer.measured_psg_fallback()
+        if fb is not None:
+            extras = f"; measured PSG fallback {fb:.3f}"
         print(f"\nfinal loss {np.mean([h['loss'] for h in hist[-5:]]):.4f} "
-              f"(bayes floor {task.bayes_xent():.3f}); "
+              f"(bayes floor {bayes}); "
               f"executed {trainer.executed_steps}, "
-              f"SMD-dropped {trainer.dropped_steps}; "
+              f"SMD-dropped {trainer.dropped_steps}{extras}; "
               f"checkpoints in {args.ckpt}")
 
 

@@ -1,39 +1,53 @@
 """The paper's own backbones: ResNet-74, ResNet-110, MobileNetV2 on
-CIFAR-10/100 (§4.1) — the faithful-reproduction path."""
-from dataclasses import dataclass
-from typing import List, Tuple
+CIFAR-10/100 (§4.1) — the faithful-reproduction path.
 
-from repro.core.config import E2TrainConfig, TrainConfig
+These are full :class:`Experiment` bundles with ``task="cifar_cnn"``; they
+run through the same ``init_train_state`` / ``make_train_step`` / ``Trainer``
+stack as every LM experiment (SMD, SLU, PSG probe, SWA, checkpointing).
+"""
+from typing import List, Optional, Tuple
 
-
-@dataclass(frozen=True)
-class CNNExperiment:
-    name: str
-    depth: int                 # ResNet depth; 0 -> MobileNetV2
-    num_classes: int
-    train: TrainConfig
-    e2: E2TrainConfig
+from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
+                               TrainConfig)
 
 
-def resnet74(num_classes: int = 10, e2: E2TrainConfig = None) -> CNNExperiment:
-    return CNNExperiment("resnet74", 74, num_classes,
-                         TrainConfig(global_batch=128, lr=0.1,
-                                     total_steps=64000, optimizer="sgdm"),
-                         e2 or E2TrainConfig())
+def cnn_model(name: str, depth: int, num_classes: int = 10,
+              width: int = 16) -> ModelConfig:
+    """``family="cnn"`` encoding understood by ``tasks/cifar_cnn.py``:
+    ``num_layers`` is the CIFAR ResNet depth (6n+2), ``d_model`` the stage-0
+    width, ``vocab_size`` the class count.  A model named ``"mobilenetv2"``
+    selects the MobileNetV2 backbone (depth is ignored).  CNNs train in
+    fp32 — the paper's precision story lives in PSG, not bf16 activations.
+    """
+    return ModelConfig(name=name, family="cnn", num_layers=depth,
+                       d_model=width, num_heads=1, num_kv_heads=1, d_ff=0,
+                       vocab_size=num_classes, glu=False, dtype="float32")
 
 
-def resnet110(num_classes: int = 10, e2: E2TrainConfig = None) -> CNNExperiment:
-    return CNNExperiment("resnet110", 110, num_classes,
-                         TrainConfig(global_batch=128, lr=0.1,
-                                     total_steps=64000, optimizer="sgdm"),
-                         e2 or E2TrainConfig())
+def _cnn_train(lr: float) -> TrainConfig:
+    return TrainConfig(global_batch=128, lr=lr, total_steps=64000,
+                       optimizer="sgdm", weight_decay=1e-4)
 
 
-def mobilenetv2(num_classes: int = 10, e2: E2TrainConfig = None) -> CNNExperiment:
-    return CNNExperiment("mobilenetv2", 0, num_classes,
-                         TrainConfig(global_batch=128, lr=0.05,
-                                     total_steps=64000, optimizer="sgdm"),
-                         e2 or E2TrainConfig())
+def resnet74(num_classes: int = 10,
+             e2: Optional[E2TrainConfig] = None) -> Experiment:
+    return Experiment(model=cnn_model("resnet74", 74, num_classes),
+                      e2=e2 or E2TrainConfig(), train=_cnn_train(0.1),
+                      task="cifar_cnn")
+
+
+def resnet110(num_classes: int = 10,
+              e2: Optional[E2TrainConfig] = None) -> Experiment:
+    return Experiment(model=cnn_model("resnet110", 110, num_classes),
+                      e2=e2 or E2TrainConfig(), train=_cnn_train(0.1),
+                      task="cifar_cnn")
+
+
+def mobilenetv2(num_classes: int = 10,
+                e2: Optional[E2TrainConfig] = None) -> Experiment:
+    return Experiment(model=cnn_model("mobilenetv2", 0, num_classes),
+                      e2=e2 or E2TrainConfig(), train=_cnn_train(0.05),
+                      task="cifar_cnn")
 
 
 def resnet_im2col_shapes(depth: int = 74, width: int = 16, batch: int = 128,
@@ -56,7 +70,7 @@ def resnet_im2col_shapes(depth: int = 74, width: int = 16, batch: int = 128,
             shapes.append((batch * H * H, 9 * (cin if b == 0 else cout), cout))
             shapes.append((batch * H * H, 9 * cout, cout))
             if b == 0 and cin != cout:
-                # 1x1 projection shortcut (models/resnet.py "downs"):
+                # 1x1 projection shortcut (models/resnet.py stage "trans"):
                 # im2col din is just cin for k=1
                 shapes.append((batch * H * H, cin, cout))
             cin = cout

@@ -320,6 +320,11 @@ class Experiment:
     train: TrainConfig = field(default_factory=TrainConfig)
     serve: ServeConfig = field(default_factory=ServeConfig)
     mesh: MeshConfig = field(default_factory=MeshConfig)
+    # Which entry of the ``repro.tasks`` registry provides init/loss for this
+    # experiment ("lm" for the transformer stack, "cifar_cnn" for the paper's
+    # ResNet/MobileNetV2 backbones).  The training stack resolves everything
+    # model-specific through this key.
+    task: str = "lm"
 
     def with_shape(self, shape: str) -> "Experiment":
         s = SHAPES[shape]

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.config import ModelConfig, SLUConfig
+from repro.core.config import SLUConfig
 from repro.models.layers import dense_init
 
 Params = Dict[str, Any]
@@ -37,8 +37,12 @@ Params = Dict[str, Any]
 # ---------------------------------------------------------------------------
 
 
-def init_gate(key, cfg: ModelConfig, slu: SLUConfig) -> Params:
-    d, h = cfg.d_model, slu.gate_hidden
+def init_gate(key, d_in: int, slu: SLUConfig) -> Params:
+    """``d_in``: feature dim the gate pools over — ``d_model`` for the LM
+    stack, the *maximum* channel width for CNNs (narrower block inputs are
+    zero-padded up to ``d_in`` in :func:`gate_apply`, so one weight-shared
+    gate serves every stage of a widening backbone)."""
+    d, h = d_in, slu.gate_hidden
     pj = slu.gate_proj
     ks = jax.random.split(key, 4)
     return {
@@ -61,8 +65,16 @@ def gate_apply(gp: Params, x: jnp.ndarray, state, slu: SLUConfig):
 
     Pool over batch AND sequence (the per-minibatch adaptation): under pjit
     the mean over the batch axis is a tiny all-reduce that XLA fuses.
+
+    CNN inputs (B, H, W, C) pool over the spatial axes the same way; block
+    inputs narrower than the gate's projection (early, thin stages) are
+    zero-padded to it — the CNN-specific gate copy this replaces lived in
+    ``models/resnet.py``.
     """
     pooled = jnp.mean(x.astype(jnp.float32), axis=tuple(range(x.ndim - 1)))
+    d_in = gp["proj"].shape[0]
+    if pooled.shape[0] < d_in:
+        pooled = jnp.pad(pooled, (0, d_in - pooled.shape[0]))
     z = pooled @ gp["proj"]
     h_prev, c_prev = state
     g = z @ gp["lstm_wx"] + h_prev @ gp["lstm_wh"] + gp["lstm_b"]

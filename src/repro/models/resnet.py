@@ -9,10 +9,29 @@ the conv-as-matmul weight gradients, SMD lives in the data pipeline.
 Convs are implemented as im2col + ``psg.matmul`` so the PSG custom-vjp (and
 later the Pallas kernel) applies to the conv backward exactly as the paper's
 Eq. (4) describes (``g_w`` as a sum of input x output-grad inner products).
+
+Structure (mirrors the transformer stack, DESIGN.md §Tasks):
+
+* **Scanned stages.**  Each of the three CIFAR stages holds one unrolled
+  *transition* block (``trans`` — owns the stride-2 spatial reduction and
+  the 1x1 projection shortcut ``down`` when the channel count changes) plus
+  the remaining ``n-1`` identical blocks with parameters stacked on a
+  leading axis (``rest``), executed with ``jax.lax.scan``.  ResNet-110
+  traces as 3 transition blocks + 3 scans of 17 instead of 54 unrolled
+  blocks, so ``jax.jit`` of a full train step completes in seconds.  The
+  SLU gate's LSTM state and the ``lax.cond`` hard skip are carried through
+  the scan exactly like the LM path.
+* **BatchNorm running statistics** live in a *state* tree parallel to the
+  params (same ``stages``/``trans``/``rest`` shape): the forward threads
+  them through the scan and returns the EMA-updated tree, so ``train=False``
+  evaluation normalizes with learned statistics — and the optimizer never
+  touches them (they are not parameters).
+* ``resnet_fwd_ref`` keeps the per-block unrolled execution over the same
+  parameter layout as the scan's semantics anchor (tests/test_resnet_scan).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +42,8 @@ from repro.core.config import E2TrainConfig
 from repro.models.layers import dense_init
 
 Params = Dict[str, Any]
+
+BN_MOMENTUM = 0.9           # running-stat EMA decay per executed train step
 
 
 # ---------------------------------------------------------------------------
@@ -48,18 +69,36 @@ def conv2d(p: Params, x: jnp.ndarray, k: int = 3, stride: int = 1) -> jnp.ndarra
 
 
 def init_bn(c: int) -> Params:
-    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,)),
-            "mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+    """Trainable affine only — running stats live in the state tree."""
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
 
 
-def batchnorm(p: Params, x: jnp.ndarray, train: bool = True):
+def init_bn_state(c: int) -> Params:
+    return {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def batchnorm(p: Params, s: Params, x: jnp.ndarray, train: bool = True
+              ) -> Tuple[jnp.ndarray, Params]:
+    """Returns (normalized x, new running-stat state).
+
+    Train mode normalizes with batch statistics and moves the EMA toward
+    them; eval mode normalizes with the stored statistics and leaves the
+    state untouched.
+    """
     if train:
         mu = jnp.mean(x, axis=(0, 1, 2))
         var = jnp.var(x, axis=(0, 1, 2))
+        new_s = {"mean": BN_MOMENTUM * s["mean"] + (1.0 - BN_MOMENTUM) * mu,
+                 "var": BN_MOMENTUM * s["var"] + (1.0 - BN_MOMENTUM) * var}
     else:
-        mu, var = p["mean"], p["var"]
+        mu, var = s["mean"], s["var"]
+        new_s = s
     y = (x - mu) * lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
-    return y
+    return y, new_s
+
+
+def _stack(trees: List[Params]) -> Params:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
 
 
 # ---------------------------------------------------------------------------
@@ -72,127 +111,235 @@ def resnet_depth_to_n(depth: int) -> int:
     return (depth - 2) // 6
 
 
+def _init_block(key, cin: int, cout: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"conv1": init_conv(k1, cin, cout), "bn1": init_bn(cout),
+            "conv2": init_conv(k2, cout, cout), "bn2": init_bn(cout)}
+
+
+def _init_block_state(cout: int) -> Params:
+    return {"bn1": init_bn_state(cout), "bn2": init_bn_state(cout)}
+
+
 def init_resnet(key, depth: int, num_classes: int = 10,
                 e2: Optional[E2TrainConfig] = None,
-                width: int = 16) -> Params:
+                width: int = 16) -> Tuple[Params, Params]:
+    """Returns (params, state): state is the BatchNorm running-stat tree."""
     n = resnet_depth_to_n(depth)
     e2 = e2 or E2TrainConfig()
-    keys = jax.random.split(key, 3 * n * 2 + 5)
+    # fixed budget: stem + 3 x (trans, down, rest-fold base) + fc + gate
+    keys = jax.random.split(key, 12)
     ki = iter(range(len(keys)))
     p: Params = {"stem": init_conv(keys[next(ki)], 3, width),
-                 "stem_bn": init_bn(width), "blocks": [], "downs": []}
+                 "stem_bn": init_bn(width), "stages": []}
+    s: Params = {"stem_bn": init_bn_state(width), "stages": []}
     cin = width
     for stage, cout in enumerate((width, 2 * width, 4 * width)):
-        for b in range(n):
-            blk = {"conv1": init_conv(keys[next(ki)], cin if b == 0 else cout, cout),
-                   "bn1": init_bn(cout),
-                   "conv2": init_conv(keys[next(ki)], cout, cout),
-                   "bn2": init_bn(cout)}
-            p["blocks"].append(blk)
-            if b == 0 and cin != cout:
-                p["downs"].append({"conv": init_conv(keys[next(ki)], cin, cout, k=1)})
-            elif b == 0:
-                p["downs"].append(None)
-            cin = cout
+        trans = _init_block(keys[next(ki)], cin, cout)
+        if cin != cout:
+            trans["down"] = {"conv": init_conv(keys[next(ki)], cin, cout, k=1)}
+        else:
+            next(ki)
+        sp: Params = {"trans": trans}
+        ss: Params = {"trans": _init_block_state(cout)}
+        if n > 1:
+            rest_base = keys[next(ki)]
+            sp["rest"] = _stack([_init_block(jax.random.fold_in(rest_base, b),
+                                             cout, cout) for b in range(n - 1)])
+            ss["rest"] = _stack([_init_block_state(cout) for _ in range(n - 1)])
+        else:
+            next(ki)
+        p["stages"].append(sp)
+        s["stages"].append(ss)
+        cin = cout
     p["fc_w"] = dense_init(keys[next(ki)], (4 * width, num_classes), jnp.float32)
     p["fc_b"] = jnp.zeros((num_classes,))
     if e2.slu.enabled:
-        # gate operates on channel-pooled features; proj from max width
-        p["slu_gate"] = _init_cnn_gate(keys[next(ki)], 4 * width, e2.slu)
-    return p
+        # weight-shared gate on channel-pooled features, padded to max width
+        p["slu_gate"] = slu.init_gate(keys[next(ki)], 4 * width, e2.slu)
+    return p, s
 
 
-def _init_cnn_gate(key, cmax: int, slu_cfg) -> Params:
-    ks = jax.random.split(key, 4)
-    h, pj = slu_cfg.gate_hidden, slu_cfg.gate_proj
-    return {"proj": dense_init(ks[0], (cmax, pj), jnp.float32),
-            "lstm_wx": dense_init(ks[1], (pj, 4 * h), jnp.float32),
-            "lstm_wh": dense_init(ks[2], (h, 4 * h), jnp.float32),
-            "lstm_b": jnp.zeros((4 * h,), jnp.float32),
-            "head_w": dense_init(ks[3], (h, 1), jnp.float32),
-            "head_b": jnp.zeros((1,), jnp.float32)}
+def _block_branch(blk: Params, bst: Params, h: jnp.ndarray, stride: int,
+                  train: bool) -> Tuple[jnp.ndarray, Params]:
+    """conv-BN-relu-conv-BN residual branch; returns (branch, new bn state)."""
+    y, ns1 = batchnorm(blk["bn1"], bst["bn1"],
+                       conv2d(blk["conv1"], h, stride=stride), train)
+    y = jax.nn.relu(y)
+    y, ns2 = batchnorm(blk["bn2"], bst["bn2"], conv2d(blk["conv2"], y), train)
+    return y, {"bn1": ns1, "bn2": ns2}
 
 
-def _cnn_gate_apply(gp: Params, x: jnp.ndarray, state, slu_cfg):
-    """Gate input = global-average-pooled features (paper Fig. 7)."""
-    pooled = jnp.mean(x.astype(jnp.float32), axis=(0, 1, 2))
-    cmax = gp["proj"].shape[0]
-    pooled = jnp.pad(pooled, (0, cmax - pooled.shape[0]))
-    z = pooled @ gp["proj"]
-    h_prev, c_prev = state
-    g = z @ gp["lstm_wx"] + h_prev @ gp["lstm_wh"] + gp["lstm_b"]
-    i_t, f_t, o_t, u_t = jnp.split(g, 4)
-    c = jax.nn.sigmoid(f_t + 1.0) * c_prev + jax.nn.sigmoid(i_t) * jnp.tanh(u_t)
-    h = jax.nn.sigmoid(o_t) * jnp.tanh(c)
-    logit = (h @ gp["head_w"] + gp["head_b"])[0]
-    pkeep = jnp.clip(jax.nn.sigmoid(logit), slu_cfg.min_keep_prob, 1.0)
-    return pkeep, (h, c)
+def _gated_block(blk, bst, h, gate_params, gst, glob, n_blocks, e2, rng,
+                 train: bool, slu_on: bool):
+    """Stride-1 identity-shortcut block, SLU-gated when ``slu_on``.
+
+    ``glob`` may be a traced scalar (the scan's block-index input); returns
+    (h, new_bn_state, new_gate_state, keep_prob, executed).
+    """
+    if not slu_on:
+        y, nbst = _block_branch(blk, bst, h, 1, train)
+        return (jax.nn.relu(h + y), nbst, gst,
+                jnp.float32(1.0), jnp.float32(1.0))
+    pkeep, gst = slu.gate_apply(gate_params, h, gst, e2.slu)
+    brng = jax.random.fold_in(rng, glob)
+    force = ((glob == 0) | (glob == n_blocks - 1)) \
+        if e2.slu.never_skip_first_last else jnp.bool_(False)
+    keep = jax.random.bernoulli(brng, pkeep) | force
+    g_st = 1.0 + pkeep - lax.stop_gradient(pkeep)   # straight-through factor
+
+    def run(op):
+        h, bst = op
+        y, nbst = _block_branch(blk, bst, h, 1, train)
+        return h + g_st * y, nbst
+
+    h, nbst = lax.cond(keep, run, lambda op: op, (h, bst))
+    return jax.nn.relu(h), nbst, gst, pkeep, keep.astype(jnp.float32)
 
 
-def resnet_fwd(p: Params, x: jnp.ndarray, depth: int,
+def _transition_block(sp, ss, h, stage, gate_params, gst, glob, n_blocks,
+                      e2, rng, train: bool, slu_on: bool):
+    """First block of a stage.  With a projection shortcut it is never gated
+    (the paper gates only identity-shortcut blocks); stage 0's transition is
+    an ordinary stride-1 identity block and gates like the rest."""
+    blk, bst = sp["trans"], ss["trans"]
+    stride = 2 if stage > 0 else 1
+    if "down" in blk:
+        shortcut = conv2d(blk["down"]["conv"], h, k=1, stride=stride)
+        y, nbst = _block_branch(blk, bst, h, stride, train)
+        return (jax.nn.relu(shortcut + y), nbst, gst,
+                jnp.float32(1.0), jnp.float32(1.0))
+    return _gated_block(blk, bst, h, gate_params, gst, glob, n_blocks, e2,
+                        rng, train, slu_on)
+
+
+def resnet_fwd(p: Params, state: Params, x: jnp.ndarray, depth: int,
                e2: Optional[E2TrainConfig] = None,
                rng: Optional[jnp.ndarray] = None,
-               train: bool = True) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """x: (B, 32, 32, 3) -> (logits, aux{slu_cost, executed})."""
+               train: bool = True
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], Params]:
+    """x: (B, 32, 32, 3) -> (logits, aux{slu_*}, new running-stat state).
+
+    Per-stage ``lax.scan`` over the stacked ``rest`` blocks; the SLU gate
+    state, the activations, and the BN statistics thread through the scan.
+    """
     n = resnet_depth_to_n(depth)
     e2 = e2 or E2TrainConfig()
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     slu_on = e2.slu.enabled and train and "slu_gate" in p
-
-    h = jax.nn.relu(batchnorm(p["stem_bn"], conv2d(p["stem"], x), train))
-    gst = (jnp.zeros((e2.slu.gate_hidden,)), jnp.zeros((e2.slu.gate_hidden,)))
-    kps, exs = [], []
-    bi = 0
+    gate_params = p.get("slu_gate")
     n_blocks = 3 * n
+
+    h, ns_stem = batchnorm(p["stem_bn"], state["stem_bn"],
+                           conv2d(p["stem"], x), train)
+    h = jax.nn.relu(h)
+    gst = slu.init_gate_state(e2.slu)
+    new_state: Params = {"stem_bn": ns_stem, "stages": []}
+    kps, exs = [], []
     for stage in range(3):
-        for b in range(n):
-            blk = p["blocks"][bi]
-            stride = 2 if (stage > 0 and b == 0) else 1
-            down = p["downs"][stage] if b == 0 else None
+        sp, ss = p["stages"][stage], state["stages"][stage]
+        glob = stage * n
+        h, nbst, gst, kp, ex = _transition_block(
+            sp, ss, h, stage, gate_params, gst, glob, n_blocks, e2, rng,
+            train, slu_on)
+        nss: Params = {"trans": nbst}
+        kps.append(kp[None]); exs.append(ex[None])
+        if n > 1:
+            globs = jnp.arange(glob + 1, glob + n)
 
-            def block_fn(h, blk=blk, stride=stride, down=down):
-                y = jax.nn.relu(batchnorm(blk["bn1"],
-                                          conv2d(blk["conv1"], h, stride=stride),
-                                          train))
-                y = batchnorm(blk["bn2"], conv2d(blk["conv2"], y), train)
-                return y
+            def body(carry, xs, n_blocks=n_blocks):
+                h, gst = carry
+                bp, bs, g = xs
+                h, nbst, gst, kp, ex = _gated_block(
+                    bp, bs, h, gate_params, gst, g, n_blocks, e2, rng,
+                    train, slu_on)
+                return (h, gst), (nbst, kp, ex)
 
-            shortcut = h
-            if down is not None:
-                shortcut = conv2d(down["conv"], h, k=1, stride=2 if stage > 0 else 1)
-            if slu_on and stride == 1 and down is None:
-                pkeep, gst = _cnn_gate_apply(p["slu_gate"], h, gst, e2.slu)
-                brng = jax.random.fold_in(rng, bi)
-                force = jnp.bool_(bi == 0 or bi == n_blocks - 1) \
-                    if e2.slu.never_skip_first_last else jnp.bool_(False)
-                keep = jax.random.bernoulli(brng, pkeep) | force
-                g_st = 1.0 + pkeep - lax.stop_gradient(pkeep)
-                h = lax.cond(keep,
-                             lambda h: h + g_st * block_fn(h),
-                             lambda h: h, h)
-                h = jax.nn.relu(h)
-                kps.append(pkeep); exs.append(keep.astype(jnp.float32))
-            else:
-                h = jax.nn.relu(shortcut + block_fn(h))
-                kps.append(jnp.float32(1.0)); exs.append(jnp.float32(1.0))
-            bi += 1
+            (h, gst), (rest_ns, rest_kp, rest_ex) = lax.scan(
+                body, (h, gst), (sp["rest"], ss["rest"], globs))
+            nss["rest"] = rest_ns
+            kps.append(rest_kp); exs.append(rest_ex)
+        new_state["stages"].append(nss)
+
+    pooled = jnp.mean(h, axis=(1, 2))
+    logits = pooled @ p["fc_w"] + p["fc_b"]
+    kps_a = jnp.concatenate(kps)
+    aux = {"slu_cost": jnp.mean(kps_a) if slu_on else jnp.float32(1.0),
+           "slu_executed": jnp.concatenate(exs), "slu_keep_probs": kps_a}
+    return logits, aux, new_state
+
+
+def resnet_fwd_ref(p: Params, state: Params, x: jnp.ndarray, depth: int,
+                   e2: Optional[E2TrainConfig] = None,
+                   rng: Optional[jnp.ndarray] = None,
+                   train: bool = True
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], Params]:
+    """Per-block unrolled reference over the same parameter layout.
+
+    Semantics anchor for the scanned forward (identical block math, RNG
+    folding, gate-state order, and BN-state threading — only the iteration
+    strategy differs).  Kept for parity tests; ResNet-110 through this path
+    unrolls 54 blocks and traces accordingly slowly.
+    """
+    n = resnet_depth_to_n(depth)
+    e2 = e2 or E2TrainConfig()
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    slu_on = e2.slu.enabled and train and "slu_gate" in p
+    gate_params = p.get("slu_gate")
+    n_blocks = 3 * n
+
+    h, ns_stem = batchnorm(p["stem_bn"], state["stem_bn"],
+                           conv2d(p["stem"], x), train)
+    h = jax.nn.relu(h)
+    gst = slu.init_gate_state(e2.slu)
+    new_state: Params = {"stem_bn": ns_stem, "stages": []}
+    kps, exs = [], []
+    for stage in range(3):
+        sp, ss = p["stages"][stage], state["stages"][stage]
+        glob = stage * n
+        h, nbst, gst, kp, ex = _transition_block(
+            sp, ss, h, stage, gate_params, gst, glob, n_blocks, e2, rng,
+            train, slu_on)
+        nss: Params = {"trans": nbst}
+        kps.append(kp); exs.append(ex)
+        if n > 1:
+            rest_ns = []
+            for b in range(n - 1):
+                bp = jax.tree.map(lambda a, b=b: a[b], sp["rest"])
+                bs = jax.tree.map(lambda a, b=b: a[b], ss["rest"])
+                h, nbst, gst, kp, ex = _gated_block(
+                    bp, bs, h, gate_params, gst, jnp.int32(glob + 1 + b),
+                    n_blocks, e2, rng, train, slu_on)
+                rest_ns.append(nbst)
+                kps.append(kp); exs.append(ex)
+            nss["rest"] = _stack(rest_ns)
+        new_state["stages"].append(nss)
+
     pooled = jnp.mean(h, axis=(1, 2))
     logits = pooled @ p["fc_w"] + p["fc_b"]
     kps_a = jnp.stack(kps)
     aux = {"slu_cost": jnp.mean(kps_a) if slu_on else jnp.float32(1.0),
            "slu_executed": jnp.stack(exs), "slu_keep_probs": kps_a}
-    return logits, aux
+    return logits, aux, new_state
 
 
-def resnet_loss(p: Params, batch, depth: int, e2=None, rng=None):
+def resnet_loss(p: Params, state: Params, batch, depth: int, e2=None,
+                rng=None, train: bool = True, fwd=resnet_fwd):
+    """Cross-entropy + SLU FLOPs regularizer (Eq. 1).
+
+    Returns ``(total, (metrics, new_state))`` — the task-registry loss
+    contract (``repro.tasks``); ``new_state`` is the updated BN-stat tree.
+    """
     e2 = e2 or E2TrainConfig()
-    logits, aux = resnet_fwd(p, batch["image"], depth, e2, rng)
+    logits, aux, new_state = fwd(p, state, batch["image"], depth, e2, rng,
+                                 train=train)
     labels = batch["label"]
     logp = jax.nn.log_softmax(logits)
     nll = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
     total = nll + (e2.slu.alpha * aux["slu_cost"] if e2.slu.enabled else 0.0)
-    return total, {"loss": nll, "slu_cost": aux["slu_cost"],
-                   "slu_exec_ratio": jnp.mean(aux["slu_executed"])}
+    metrics = {"loss": nll, "slu_cost": aux["slu_cost"],
+               "slu_exec_ratio": jnp.mean(aux["slu_executed"])}
+    return total, (metrics, new_state)
 
 
 # ---------------------------------------------------------------------------
@@ -204,55 +351,95 @@ MBV2_CFG = [  # (expansion, cout, blocks, stride)
     (6, 64, 4, 2), (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
 
 
-def init_mobilenetv2(key, num_classes: int = 10) -> Params:
+def _mbv2_layout() -> List[Tuple[int, int, int, int, bool]]:
+    """Static per-block (cin, hidden, cout, stride, residual) — architecture
+    facts stay out of the param pytree so optimizers only see arrays."""
+    cin, out = 32, []
+    for t, c, nblk, s in MBV2_CFG:
+        for b in range(nblk):
+            stride = s if b == 0 else 1
+            out.append((cin, cin * t, c, stride, stride == 1 and cin == c))
+            cin = c
+    return out
+
+
+def init_mobilenetv2(key, num_classes: int = 10) -> Tuple[Params, Params]:
+    """Returns (params, state): state is the BatchNorm running-stat tree."""
     keys = jax.random.split(key, 64)
     ki = iter(range(64))
     p: Params = {"stem": init_conv(keys[next(ki)], 3, 32), "stem_bn": init_bn(32),
                  "blocks": []}
-    cin = 32
-    for t, c, nblk, s in MBV2_CFG:
-        for b in range(nblk):
-            stride = s if b == 0 else 1
-            hidden = cin * t
-            blk = {"expand": init_conv(keys[next(ki)], cin, hidden, k=1),
-                   "bn1": init_bn(hidden),
-                   "dw": dense_init(keys[next(ki)], (3 * 3, hidden), jnp.float32),
-                   "bn2": init_bn(hidden),
-                   "project": init_conv(keys[next(ki)], hidden, c, k=1),
-                   "bn3": init_bn(c),
-                   "stride": stride, "residual": stride == 1 and cin == c}
-            p["blocks"].append(blk)
-            cin = c
-    p["head"] = init_conv(keys[next(ki)], cin, 1280, k=1)
+    s: Params = {"stem_bn": init_bn_state(32), "blocks": []}
+    for cin, hidden, c, _stride, _res in _mbv2_layout():
+        blk = {"expand": init_conv(keys[next(ki)], cin, hidden, k=1),
+               "bn1": init_bn(hidden),
+               "dw": dense_init(keys[next(ki)], (3 * 3, hidden), jnp.float32),
+               "bn2": init_bn(hidden),
+               "project": init_conv(keys[next(ki)], hidden, c, k=1),
+               "bn3": init_bn(c)}
+        p["blocks"].append(blk)
+        s["blocks"].append({"bn1": init_bn_state(hidden),
+                            "bn2": init_bn_state(hidden),
+                            "bn3": init_bn_state(c)})
+    last_cout = _mbv2_layout()[-1][2]
+    p["head"] = init_conv(keys[next(ki)], last_cout, 1280, k=1)
     p["head_bn"] = init_bn(1280)
+    s["head_bn"] = init_bn_state(1280)
     p["fc_w"] = dense_init(keys[next(ki)], (1280, num_classes), jnp.float32)
     p["fc_b"] = jnp.zeros((num_classes,))
-    return p
+    return p, s
 
 
 def _depthwise(w: jnp.ndarray, x: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """3x3 depthwise conv: stride applied to the patch stack *before* the
+    multiply-sum, so a stride-2 block computes a quarter of the products
+    instead of computing full resolution and slicing the result."""
     B, H, W, C = x.shape
     xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
     cols = []
     for i in range(3):
         for j in range(3):
-            cols.append(xp[:, i:i + H:1, j:j + W:1, :])
-    stack = jnp.stack(cols, axis=-2)                       # (B,H,W,9,C)
-    y = jnp.sum(stack * w[None, None, None], axis=-2)
-    if stride > 1:
-        y = y[:, ::stride, ::stride]
-    return y
+            cols.append(xp[:, i:i + H:stride, j:j + W:stride, :])
+    stack = jnp.stack(cols, axis=-2)                 # (B,H',W',9,C)
+    return jnp.sum(stack * w[None, None, None], axis=-2)
 
 
-def mobilenetv2_fwd(p: Params, x: jnp.ndarray, train: bool = True):
-    h = jax.nn.relu6(batchnorm(p["stem_bn"], conv2d(p["stem"], x), train))
-    for blk in p["blocks"]:
+def mobilenetv2_fwd(p: Params, state: Params, x: jnp.ndarray,
+                    train: bool = True) -> Tuple[jnp.ndarray, Params]:
+    """Returns (logits, new running-stat state)."""
+    h, ns_stem = batchnorm(p["stem_bn"], state["stem_bn"],
+                           conv2d(p["stem"], x), train)
+    h = jax.nn.relu6(h)
+    new_state: Params = {"stem_bn": ns_stem, "blocks": []}
+    for blk, bst, (_cin, _hid, _c, stride, residual) in zip(
+            p["blocks"], state["blocks"], _mbv2_layout()):
         inp = h
-        y = jax.nn.relu6(batchnorm(blk["bn1"], conv2d(blk["expand"], h, k=1), train))
-        y = jax.nn.relu6(batchnorm(blk["bn2"],
-                                   _depthwise(blk["dw"], y, blk["stride"]), train))
-        y = batchnorm(blk["bn3"], conv2d(blk["project"], y, k=1), train)
-        h = inp + y if blk["residual"] else y
-    h = jax.nn.relu6(batchnorm(p["head_bn"], conv2d(p["head"], h, k=1), train))
+        y, ns1 = batchnorm(blk["bn1"], bst["bn1"],
+                           conv2d(blk["expand"], h, k=1), train)
+        y = jax.nn.relu6(y)
+        y, ns2 = batchnorm(blk["bn2"], bst["bn2"],
+                           _depthwise(blk["dw"], y, stride), train)
+        y = jax.nn.relu6(y)
+        y, ns3 = batchnorm(blk["bn3"], bst["bn3"],
+                           conv2d(blk["project"], y, k=1), train)
+        h = inp + y if residual else y
+        new_state["blocks"].append({"bn1": ns1, "bn2": ns2, "bn3": ns3})
+    h, ns_head = batchnorm(p["head_bn"], state["head_bn"],
+                           conv2d(p["head"], h, k=1), train)
+    h = jax.nn.relu6(h)
+    new_state["head_bn"] = ns_head
     pooled = jnp.mean(h, axis=(1, 2))
-    return pooled @ p["fc_w"] + p["fc_b"]
+    return pooled @ p["fc_w"] + p["fc_b"], new_state
+
+
+def mobilenetv2_loss(p: Params, state: Params, batch, rng=None,
+                     train: bool = True):
+    """Task-registry loss contract; MobileNetV2 carries no SLU gate, so the
+    SLU metrics report full execution."""
+    logits, new_state = mobilenetv2_fwd(p, state, batch["image"], train=train)
+    labels = batch["label"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    metrics = {"loss": nll, "slu_cost": jnp.float32(1.0),
+               "slu_exec_ratio": jnp.float32(1.0)}
+    return nll, (metrics, new_state)

@@ -227,7 +227,7 @@ def init_lm(key, cfg: ModelConfig, e2: Optional[E2TrainConfig] = None) -> Params
                  for xk in xks[: n_units]]
         p["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs), *xattn)
     if e2.slu.enabled:
-        p["slu_gate"] = slu.init_gate(keys[-5], cfg, e2.slu)
+        p["slu_gate"] = slu.init_gate(keys[-5], cfg.d_model, e2.slu)
     return p
 
 

@@ -1,0 +1,71 @@
+"""Model-agnostic task registry (DESIGN.md §Tasks).
+
+A :class:`Task` adapts one model family to the shared training stack:
+``training/train_step.py`` and ``training/trainer.py`` know nothing about
+transformers or CNNs — they resolve the experiment's ``task`` key here and
+get back ``init`` / ``loss`` callables.  Everything the stack layers on top
+(SMD drops, microbatch accumulation, the PSG sign-vote backward and its
+measured ``psg_fallback_ratio`` probe, majority vote, SWA, checkpoint +
+resume) therefore works for every registered task unchanged.
+
+Contract:
+
+* ``init(key, exp) -> (params, model_state)``.  ``model_state`` is the
+  task's non-trainable buffers (e.g. BatchNorm running statistics), ``None``
+  when the task has none.  The optimizer never sees it: the train step
+  threads it next to the params and stores it on ``TrainState.model_state``.
+* ``make_loss(exp) -> loss(params, model_state, batch, rng)`` returning
+  ``(total_loss, (metrics, new_model_state))`` with *scalar* metrics (the
+  trainer logs them as floats; microbatch accumulation means them).
+* ``make_predict(exp) -> predict(params, model_state, batch)`` — eval-mode
+  logits: stored statistics, no RNG, no SLU sampling.
+
+Built-in tasks: ``"lm"`` (the generic transformer stack) and ``"cifar_cnn"``
+(the paper's ResNet-74/110 + MobileNetV2 backbones).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.core.config import Experiment
+
+LossFn = Callable[..., Tuple[Any, Tuple[Dict[str, Any], Any]]]
+
+
+@dataclass(frozen=True)
+class Task:
+    name: str
+    init: Callable[[Any, Experiment], Tuple[Any, Any]]
+    make_loss: Callable[[Experiment], LossFn]
+    make_predict: Optional[Callable[[Experiment], Callable]] = None
+
+
+_REGISTRY: Dict[str, Task] = {}
+
+
+def register(task: Task) -> Task:
+    if task.name in _REGISTRY:
+        raise ValueError(f"task {task.name!r} already registered")
+    _REGISTRY[task.name] = task
+    return task
+
+
+def get_task(name: str) -> Task:
+    _ensure_builtin()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown task {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def task_names() -> Tuple[str, ...]:
+    _ensure_builtin()
+    return tuple(sorted(_REGISTRY))
+
+
+def _ensure_builtin() -> None:
+    # import for the registration side effect; deferred so that importing
+    # repro.tasks never drags in model code the caller doesn't use
+    from repro.tasks import cifar_cnn, lm  # noqa: F401

@@ -1,0 +1,43 @@
+"""``lm`` task: the generic transformer LM stack (``models/transformer``).
+
+Stateless (no non-trainable buffers): ``model_state`` is ``None`` and passes
+through the loss untouched.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+from repro.core.config import Experiment
+from repro.models import transformer
+from repro.tasks import Task, register
+
+
+def _init(key, exp: Experiment) -> Tuple[Any, Any]:
+    return transformer.init_lm(key, exp.model, exp.e2), None
+
+
+def _make_loss(exp: Experiment):
+    cfg, e2, tc = exp.model, exp.e2, exp.train
+
+    def loss(params, model_state, batch, rng):
+        total, metrics = transformer.lm_loss(params, batch, cfg, e2, rng,
+                                             remat=tc.remat)
+        return total, (metrics, model_state)
+
+    return loss
+
+
+def _make_predict(exp: Experiment):
+    cfg = exp.model
+
+    def predict(params, model_state, batch):
+        out = transformer.lm_fwd(params, batch["tokens"], cfg, exp.e2,
+                                 frontend_embeds=batch.get("frontend"),
+                                 train=False, remat="none")
+        return out.logits
+
+    return predict
+
+
+LM_TASK = register(Task(name="lm", init=_init, make_loss=_make_loss,
+                        make_predict=_make_predict))

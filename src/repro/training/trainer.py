@@ -1,7 +1,10 @@
 """Training loop orchestration: SMD, checkpoints, straggler policy, metrics.
 
-The loop is deliberately thin — all compute lives in the jitted train_step —
-and deals with the operational concerns of a long-running multi-pod job:
+The loop is deliberately thin — all compute lives in the jitted train_step,
+and everything model-specific lives behind the ``repro.tasks`` registry, so
+the same loop trains the transformer LM stack and the paper's CIFAR CNNs
+(there is no other training loop in the repo) — and deals with the
+operational concerns of a long-running multi-pod job:
 
 * SMD-dropped steps advance the step counter without compute or data fetch;
 * periodic + final checkpoints via ``repro.ft.checkpoint`` (async save);

@@ -1,0 +1,140 @@
+"""Scanned CIFAR ResNet: parity with the kept per-block reference, and
+BatchNorm running-statistic behaviour (the regression the state tree fixes).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import (E2TrainConfig, PSGConfig, SLUConfig,
+                               TrainConfig)
+from repro.data.synthetic import GaussianImageTask, make_image_batch
+from repro.models import resnet as R
+
+TASK = GaussianImageTask(num_classes=10, snr=2.0)
+
+
+def _setup(slu_on, depth=14):
+    e2 = E2TrainConfig(slu=SLUConfig(enabled=slu_on, alpha=1e-3))
+    p, s = R.init_resnet(jax.random.PRNGKey(0), depth, 10, e2)
+    batch = make_image_batch(TASK, 0, 0, 0, 4)
+    rng = jax.random.PRNGKey(3)
+    return e2, p, s, batch, rng
+
+
+@pytest.mark.parametrize("slu_on", [False, True])
+def test_scanned_forward_matches_reference(slu_on):
+    """lax.scan over stacked block params == per-block unrolled execution:
+    logits, SLU aux, and the returned BN state tree (depth 14, ~1e-5)."""
+    e2, p, s, batch, rng = _setup(slu_on)
+    la, aa, nsa = R.resnet_fwd(p, s, batch["image"], 14, e2, rng, train=True)
+    lb, ab, nsb = R.resnet_fwd_ref(p, s, batch["image"], 14, e2, rng,
+                                   train=True)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(aa["slu_keep_probs"]),
+                               np.asarray(ab["slu_keep_probs"]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(aa["slu_executed"]),
+                               np.asarray(ab["slu_executed"]), atol=0)
+    assert (jax.tree_util.tree_structure(nsa) ==
+            jax.tree_util.tree_structure(nsb))
+    for x, y in zip(jax.tree.leaves(nsa), jax.tree.leaves(nsb)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+@pytest.mark.parametrize("slu_on", [False, True])
+def test_scanned_grad_matches_reference(slu_on):
+    """jax.grad through the scan == through the unrolled reference, for the
+    full task loss (xent + SLU regularizer), SLU forced on and off."""
+    e2, p, s, batch, rng = _setup(slu_on)
+    ga = jax.grad(lambda p: R.resnet_loss(p, s, batch, 14, e2, rng)[0])(p)
+    gb = jax.grad(lambda p: R.resnet_loss(p, s, batch, 14, e2, rng,
+                                          fwd=R.resnet_fwd_ref)[0])(p)
+    assert (jax.tree_util.tree_structure(ga) ==
+            jax.tree_util.tree_structure(gb))
+    for x, y in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=2e-5)
+
+
+def test_eval_mode_matches_reference_and_uses_stored_stats():
+    e2, p, s, batch, rng = _setup(False)
+    la, _, nsa = R.resnet_fwd(p, s, batch["image"], 14, e2, rng, train=False)
+    lb, _, nsb = R.resnet_fwd_ref(p, s, batch["image"], 14, e2, rng,
+                                  train=False)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=1e-5)
+    # eval does not move the stats
+    for x, y in zip(jax.tree.leaves(nsa), jax.tree.leaves(s)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm running statistics
+# ---------------------------------------------------------------------------
+
+
+def test_bn_train_steps_move_the_ema():
+    """Repeated train-mode forwards converge the EMA to the batch moments."""
+    e2, p, s, batch, rng = _setup(False, depth=8)
+    x = batch["image"]
+    stem_out = R.conv2d(p["stem"], x)          # what stem_bn normalizes
+    mu_batch = np.asarray(jnp.mean(stem_out, axis=(0, 1, 2)))
+    # one step moves the stem EMA off init by (1 - momentum) * mu
+    _, _, s1 = R.resnet_fwd(p, s, x, 8, e2, rng, train=True)
+    step1 = np.asarray(s1["stem_bn"]["mean"])
+    np.testing.assert_allclose(step1, (1 - R.BN_MOMENTUM) * mu_batch,
+                               atol=1e-6)
+    # many steps converge it to the batch moments
+    for _ in range(80):
+        _, _, s = R.resnet_fwd(p, s, x, 8, e2, rng, train=True)
+    np.testing.assert_allclose(np.asarray(s["stem_bn"]["mean"]), mu_batch,
+                               atol=1e-4)
+    var_batch = np.asarray(jnp.var(stem_out, axis=(0, 1, 2)))
+    np.testing.assert_allclose(np.asarray(s["stem_bn"]["var"]), var_batch,
+                               rtol=1e-2)
+
+
+def test_bn_eval_uses_learned_stats_not_init():
+    """Regression pin: eval normalization reads the trained EMA, not the
+    init zeros/ones the old params-resident buffers were stuck at."""
+    e2, p, s0, batch, rng = _setup(False, depth=8)
+    x = batch["image"]
+    s = s0
+    for _ in range(80):
+        _, _, s = R.resnet_fwd(p, s, x, 8, e2, rng, train=True)
+    logits_init, _, _ = R.resnet_fwd(p, s0, x, 8, e2, rng, train=False)
+    logits_ema, _, _ = R.resnet_fwd(p, s, x, 8, e2, rng, train=False)
+    assert not np.allclose(np.asarray(logits_init), np.asarray(logits_ema))
+    # with the EMA converged to this batch's moments, eval == train-mode
+    logits_train, _, _ = R.resnet_fwd(p, s, x, 8, e2, rng, train=True)
+    np.testing.assert_allclose(np.asarray(logits_ema),
+                               np.asarray(logits_train), atol=1e-2)
+
+
+def test_bn_stats_are_not_trainable_params():
+    """Regression pin: running stats live in the state tree, NOT in params —
+    the optimizer (weight decay, sign updates) can never corrupt them."""
+    e2, p, s, batch, rng = _setup(True)
+    flat_p = jax.tree_util.tree_flatten_with_path(p)[0]
+    keys_p = {str(k) for path, _ in flat_p for k in path}
+    assert "'mean'" not in str(keys_p) and "'var'" not in str(keys_p)
+    flat_s = jax.tree_util.tree_flatten_with_path(s)[0]
+    keys_s = {str(path) for path, _ in flat_s}
+    assert any("mean" in k for k in keys_s) and any("var" in k for k in keys_s)
+
+    # end-to-end: an aggressive-weight-decay sign-optimizer train step moves
+    # every param leaf, yet the stats follow the data EMA exactly
+    from repro.configs.paper_cnns import cnn_model
+    from repro.core.config import Experiment
+    from repro.training.train_step import init_train_state, make_train_step
+    exp = Experiment(model=cnn_model("resnet14", 14),
+                     e2=E2TrainConfig(psg=PSGConfig(True, swa=False)),
+                     train=TrainConfig(global_batch=4, lr=0.1,
+                                       optimizer="psg", weight_decay=0.5,
+                                       total_steps=2, schedule="constant"),
+                     task="cifar_cnn")
+    st = init_train_state(jax.random.PRNGKey(0), exp)
+    st2, _ = jax.jit(make_train_step(exp))(st, batch)
+    var_leaves = [np.asarray(l) for l in jax.tree.leaves(
+        jax.tree.map(lambda s: s["var"],
+                     st2.model_state, is_leaf=lambda n: isinstance(n, dict)
+                     and "var" in n))]
+    assert all((v > 0).all() for v in var_leaves)

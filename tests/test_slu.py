@@ -12,15 +12,29 @@ from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
 
 
 def test_gate_outputs_probability():
-    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
-                      num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=16)
     scfg = SLUConfig(enabled=True)
-    gp = slu.init_gate(jax.random.PRNGKey(0), cfg, scfg)
+    gp = slu.init_gate(jax.random.PRNGKey(0), 32, scfg)
     st = slu.init_gate_state(scfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
     p, st2 = slu.gate_apply(gp, x, st, scfg)
     assert scfg.min_keep_prob <= float(p) <= 1.0
     assert st2[0].shape == (scfg.gate_hidden,)
+
+
+def test_gate_pads_narrow_inputs():
+    """One weight-shared gate serves narrower (early-stage CNN) inputs by
+    zero-padding the pooled features up to the gate's projection width."""
+    scfg = SLUConfig(enabled=True)
+    gp = slu.init_gate(jax.random.PRNGKey(0), 64, scfg)
+    st = slu.init_gate_state(scfg)
+    narrow = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 4, 16))
+    p, _ = slu.gate_apply(gp, narrow, st, scfg)
+    assert scfg.min_keep_prob <= float(p) <= 1.0
+    # padding is exactly zero-extension: a pre-padded input agrees
+    pooled = jnp.mean(narrow, axis=(0, 1, 2))
+    wide = jnp.pad(pooled, (0, 48))[None, None, None, :]
+    p2, _ = slu.gate_apply(gp, wide, st, scfg)
+    np.testing.assert_allclose(float(p), float(p2), rtol=1e-6)
 
 
 def test_gated_residual_skip_and_keep():
@@ -44,10 +58,8 @@ def test_gated_residual_skip_and_keep():
 
 def test_gate_gradient_flows_through_st():
     """Straight-through: task loss produces d(loss)/d(gate params) != 0."""
-    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
-                      num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=16)
     scfg = SLUConfig(enabled=True)
-    gp = slu.init_gate(jax.random.PRNGKey(0), cfg, scfg)
+    gp = slu.init_gate(jax.random.PRNGKey(0), 32, scfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
 
     def loss(gp):

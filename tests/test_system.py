@@ -103,37 +103,67 @@ def test_serving_engine_waves():
     assert all(0 <= t < 64 for r in done for t in r.out)
 
 
-def test_resnet74_family_e2train_smoke():
-    """Paper-faithful path: CIFAR ResNet (reduced depth 14) + full E²-Train."""
+def _cnn_exp(depth, e2, **train_kw):
+    from repro.configs.paper_cnns import cnn_model
+    kw = dict(global_batch=8, lr=0.03, optimizer="psg", total_steps=30,
+              schedule="constant", weight_decay=5e-4)
+    kw.update(train_kw)
+    return Experiment(model=cnn_model(f"resnet{depth}", depth), e2=e2,
+                      train=TrainConfig(**kw), task="cifar_cnn")
+
+
+def _mk_img(exp):
     from repro.data.synthetic import GaussianImageTask, make_image_batch
-    from repro.models import resnet as R
-    from repro.optim.api import make_optimizer
-
-    e2 = E2TrainConfig(smd=SMDConfig(True), slu=SLUConfig(True, alpha=0.01),
-                       psg=PSGConfig(True, swa=False))
-    tcfg = TrainConfig(lr=0.03, optimizer="psg", total_steps=30,
-                       schedule="constant", weight_decay=5e-4)
     task = GaussianImageTask(num_classes=10, snr=2.0)
-    params = R.init_resnet(jax.random.PRNGKey(0), 14, 10, e2)
-    opt = make_optimizer(tcfg)
-    opt_state = opt.init(params)
+    return lambda s, sh: make_image_batch(task, 0, s, sh,
+                                          exp.train.global_batch)
 
-    from repro.core import psg as psgmod
 
-    @jax.jit
-    def step(params, opt_state, batch, i):
-        def loss_fn(p):
-            with psgmod.enable(e2.psg):
-                return R.resnet_loss(p, batch, 14, e2,
-                                     jax.random.fold_in(jax.random.PRNGKey(1), i))
-        (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
-        params2, opt2 = opt.apply(params, g, opt_state, i)
-        return params2, opt2, l
-
-    losses = []
-    for i in range(30):
-        batch = make_image_batch(task, 0, i, 0, 16)
-        params, opt_state, l = step(params, opt_state, batch, jnp.int32(i))
-        losses.append(float(l))
+def test_resnet14_converges_through_trainer():
+    """Paper-faithful path: CIFAR ResNet (reduced depth 14) + SLU + PSG,
+    through the SAME Trainer/train_step stack as the LM experiments."""
+    e2 = E2TrainConfig(slu=SLUConfig(True, alpha=0.01),
+                       psg=PSGConfig(True, swa=False))
+    exp = _cnn_exp(14, e2, global_batch=16)
+    state = init_train_state(jax.random.PRNGKey(0), exp)
+    tr = Trainer(exp, state, _mk_img(exp))
+    hist = tr.run(30)
+    losses = [h["loss"] for h in hist]
     assert losses[-1] < losses[0], losses[:3] + losses[-3:]
     assert np.isfinite(losses).all()
+
+
+def test_resnet74_full_e2train_through_trainer():
+    """Acceptance: ResNet-74 (CIFAR shapes) end-to-end with SMD+SLU+PSG via
+    the Trainer — measured psg_fallback_ratio and a non-trivial
+    slu_exec_ratio come out of the shared metrics path."""
+    e2 = E2TrainConfig(smd=SMDConfig(True, 0.5),
+                       slu=SLUConfig(True, alpha=0.01),
+                       psg=PSGConfig(True, swa=False))
+    exp = _cnn_exp(74, e2, global_batch=4, total_steps=6)
+    state = init_train_state(jax.random.PRNGKey(0), exp)
+    tr = Trainer(exp, state, _mk_img(exp))
+    hist = tr.run(6)
+    assert tr.executed_steps >= 1 and tr.dropped_steps >= 1   # SMD active
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    fb = tr.measured_psg_fallback()
+    assert fb is not None and 0.0 < fb <= 1.0
+    ex = np.mean([h["slu_exec_ratio"] for h in hist])
+    assert 0.0 < ex < 1.0, ex      # gates actually skip some of 36 blocks
+    # BN running stats moved off their init under the shared stack
+    stem = tr.state.model_state["stem_bn"]
+    assert float(np.abs(np.asarray(stem["mean"])).max()) > 0.0
+
+
+def test_resnet110_trace_time_budget():
+    """The scanned stack keeps the FULL ResNet-110 train-step trace cheap
+    (54 blocks would otherwise unroll into the jaxpr)."""
+    import time
+    e2 = E2TrainConfig(slu=SLUConfig(True, alpha=0.01))
+    exp = _cnn_exp(110, e2, global_batch=2)
+    state = init_train_state(jax.random.PRNGKey(0), exp)
+    batch = _mk_img(exp)(0, 0)
+    t0 = time.perf_counter()
+    jax.jit(make_train_step(exp)).lower(state, batch)
+    dt = time.perf_counter() - t0
+    assert dt < 60.0, f"ResNet-110 train-step trace took {dt:.1f}s"

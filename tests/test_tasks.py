@@ -1,0 +1,166 @@
+"""Task registry: both registered tasks round-trip through the full shared
+training stack — init_train_state -> make_train_step -> Trainer.run ->
+checkpoint save/resume — and task-specific metrics surface through it."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnns import cnn_model
+from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
+                               PSGConfig, SLUConfig, TrainConfig)
+from repro.data.synthetic import (GaussianImageTask, MarkovLMTask,
+                                  make_image_batch, make_lm_batch)
+from repro.ft.checkpoint import restore_checkpoint, save_checkpoint
+from repro.tasks import get_task, task_names
+from repro.training.train_step import init_train_state
+from repro.training.trainer import Trainer
+
+
+def _exp(task_name, e2=None):
+    e2 = e2 or E2TrainConfig(slu=SLUConfig(enabled=True, alpha=1e-3))
+    tr = TrainConfig(global_batch=8, seq_len=16, lr=0.05,
+                     total_steps=10, schedule="constant")
+    if task_name == "cifar_cnn":
+        return Experiment(model=cnn_model("resnet14", 14), e2=e2, train=tr,
+                          task="cifar_cnn")
+    model = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                        num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=32,
+                        dtype="float32")
+    return Experiment(model=model, e2=e2, train=tr, task="lm")
+
+
+def _mk(exp):
+    if exp.task == "cifar_cnn":
+        task = GaussianImageTask(num_classes=10, snr=2.0)
+        return lambda s, sh: make_image_batch(task, 0, s, sh,
+                                              exp.train.global_batch)
+    task = MarkovLMTask(vocab=exp.model.vocab_size)
+    return lambda s, sh: make_lm_batch(task, 0, s, sh, exp.train.global_batch,
+                                       exp.train.seq_len)
+
+
+def test_registry_contents():
+    assert set(task_names()) >= {"lm", "cifar_cnn"}
+    with pytest.raises(KeyError):
+        get_task("no_such_task")
+
+
+@pytest.mark.parametrize("task_name", ["lm", "cifar_cnn"])
+def test_roundtrip_checkpoint_resume(task_name):
+    """Train 6 straight == train 4, checkpoint, restore, train 2 — loss and
+    state (params AND non-trainable model_state) continue identically."""
+    exp = _exp(task_name)
+    mk = _mk(exp)
+
+    stA = init_train_state(jax.random.PRNGKey(0), exp)
+    trA = Trainer(exp, stA, mk)
+    histA = trA.run(6)
+
+    stB = init_train_state(jax.random.PRNGKey(0), exp)
+    trB = Trainer(exp, stB, mk)
+    histB = trB.run(4)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, trB.state, 4)
+        restored, step = restore_checkpoint(d, trB.state)
+        assert step == 4
+        trC = Trainer(exp, jax.tree.map(jnp.asarray, restored), mk)
+        histC = trC.run(2)
+
+    for a, b in zip(jax.tree.leaves(trA.state.params),
+                    jax.tree.leaves(trC.state.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # non-trainable buffers (BN running stats for the CNN task) resume too
+    for a, b in zip(jax.tree.leaves(trA.state.model_state),
+                    jax.tree.leaves(trC.state.model_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # loss continuity: the resumed trainer's steps match the straight run's
+    np.testing.assert_allclose(
+        [h["loss"] for h in histB + histC],
+        [h["loss"] for h in histA], rtol=1e-4)
+
+
+@pytest.mark.parametrize("task_name", ["lm", "cifar_cnn"])
+def test_psg_fallback_ratio_emitted(task_name):
+    """PSG on -> the measured MAC-weighted fallback ratio appears in the
+    step metrics for BOTH tasks (the CNN conv backward routes through the
+    same tile kernel as the LM matmuls)."""
+    e2 = E2TrainConfig(psg=PSGConfig(enabled=True, swa=False))
+    exp = _exp(task_name, e2=e2)
+    exp = exp.replace(train=TrainConfig(global_batch=4, seq_len=16, lr=0.03,
+                                        optimizer="psg", total_steps=2,
+                                        schedule="constant"))
+    state = init_train_state(jax.random.PRNGKey(0), exp)
+    tr = Trainer(exp, state, _mk(exp))
+    hist = tr.run(2)
+    for h in hist:
+        assert "psg_fallback_ratio" in h
+        assert 0.0 <= h["psg_fallback_ratio"] <= 1.0
+    assert tr.measured_psg_fallback() is not None
+
+
+def test_microbatch_accumulation_threads_model_state():
+    """Grad accumulation carries the CNN's BN state through the microbatch
+    scan: the EMA after a 2-microbatch step reflects both microbatches."""
+    import dataclasses
+    exp = _exp("cifar_cnn")
+    exp2 = exp.replace(train=dataclasses.replace(exp.train, microbatches=2))
+    mk = _mk(exp)
+    s1 = init_train_state(jax.random.PRNGKey(0), exp2)
+    from repro.training.train_step import make_train_step
+    step = jax.jit(make_train_step(exp2))
+    s2, metrics = step(s1, mk(0, 0))
+    stem0 = np.asarray(s1.model_state["stem_bn"]["mean"])
+    stem1 = np.asarray(s2.model_state["stem_bn"]["mean"])
+    assert not np.allclose(stem0, stem1)
+    assert np.isfinite(float(metrics["total_loss"]))
+
+
+def test_recalibrate_model_state_for_swa_eval():
+    """SWA-averaged weights need re-estimated BN stats (the running EMA
+    tracked the raw trajectory): the helper moves them, and is a no-op for
+    the stateless LM task."""
+    from repro.training.train_step import (eval_params,
+                                           recalibrate_model_state)
+    e2 = E2TrainConfig(psg=PSGConfig(enabled=True, swa=True,
+                                     swa_start_frac=0.0))
+    exp = _exp("cifar_cnn", e2=e2)
+    exp = exp.replace(train=TrainConfig(global_batch=4, lr=0.03,
+                                        optimizer="psg", total_steps=4,
+                                        schedule="constant"))
+    mk = _mk(exp)
+    tr = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk)
+    tr.run(4)
+    assert tr.state.swa is not None
+    swa_p = eval_params(tr.state, exp)
+    recal = recalibrate_model_state(exp, swa_p, tr.state.model_state,
+                                    [mk(i, 0) for i in range(3)])
+    a = np.asarray(tr.state.model_state["stem_bn"]["mean"])
+    b = np.asarray(recal["stem_bn"]["mean"])
+    assert not np.allclose(a, b)
+    # stateless task: pass-through
+    lm_exp = _exp("lm")
+    assert recalibrate_model_state(lm_exp, None, None, []) is None
+
+
+def test_mobilenetv2_task_trains():
+    """The compact backbone rides the same registry path."""
+    exp = Experiment(model=cnn_model("mobilenetv2", 0), e2=E2TrainConfig(),
+                     train=TrainConfig(global_batch=4, lr=0.05,
+                                       optimizer="sgdm", total_steps=2,
+                                       schedule="constant"),
+                     task="cifar_cnn")
+    state = init_train_state(jax.random.PRNGKey(0), exp)
+    tr = Trainer(exp, state, _mk(exp))
+    hist = tr.run(2)
+    assert len(hist) == 2
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    # BN buffers updated, and eval-mode prediction consumes them
+    assert float(np.abs(np.asarray(
+        tr.state.model_state["stem_bn"]["mean"])).max()) > 0.0
+    predict = get_task("cifar_cnn").make_predict(exp)
+    logits = predict(tr.state.params, tr.state.model_state, _mk(exp)(99, 0))
+    assert logits.shape == (4, 10)
+    assert np.isfinite(np.asarray(logits)).all()
