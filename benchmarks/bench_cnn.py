@@ -1,9 +1,10 @@
 """Paper Tab. 4: E²-Train on the paper's own backbones (ResNet family +
 MobileNetV2) — the faithful-reproduction path, reduced depths for CPU.
 
-Rows: baseline SMB vs E²-Train at the three operating points, on the
-class-conditional Gaussian image task; computational savings from the
-composition law (exact, tests/test_energy.py).
+Rows: baseline SMB vs E²-Train, on the class-conditional Gaussian image
+task; savings come from ``Trainer.energy_report()`` — config-derived paper
+composition next to the run's measured telemetry, priced by the per-layer
+CNN cost model (core/cost.py).
 
 Runs through the shared training stack (``repro.tasks`` "cifar_cnn" +
 ``Trainer``) — SMD drops, the PSG fallback probe, SLU metrics, and
@@ -21,13 +22,12 @@ import numpy as np
 from repro.configs.paper_cnns import cnn_model
 from repro.core.config import (E2TrainConfig, Experiment, PSGConfig,
                                SLUConfig, SMDConfig, TrainConfig)
-from repro.core.energy import PSG_FACTOR_PAPER, computational_savings
 from repro.data.synthetic import GaussianImageTask, make_image_batch
 from repro.tasks import get_task
 from repro.training.train_step import eval_params, init_train_state
 from repro.training.trainer import Trainer
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, energy_fields
 
 TASK = GaussianImageTask(num_classes=10, snr=2.0)
 BATCH = 16
@@ -72,19 +72,19 @@ def run(fast: bool = True) -> List[str]:
     steps = 80 if fast else 240
     depth = 14 if fast else 26          # reduced ResNet (6n+2 family)
     rows = []
-    acc, n, wall, _ = _train_resnet(depth, E2TrainConfig(), steps)
+    acc, n, wall, tr0 = _train_resnet(depth, E2TrainConfig(), steps)
     rows.append(csv_row(f"tab4/resnet{depth}_smb", wall / max(n, 1) * 1e6,
-                        f"acc={acc:.4f};savings=0.0"))
-    e2 = E2TrainConfig(smd=SMDConfig(True), slu=SLUConfig(True, alpha=5e-3),
+                        f"acc={acc:.4f};{energy_fields(tr0, steps=steps)}"))
+    e2 = E2TrainConfig(smd=SMDConfig(True),
+                       slu=SLUConfig(True, alpha=5e-3, target_skip=0.2),
                        psg=PSGConfig(True, swa=False))
     acc2, n2, wall2, tr2 = _train_resnet(depth, e2, 2 * steps,
                                          optimizer="psg", lr=0.03)
-    measured_fb = tr2.measured_psg_fallback()
-    sav = computational_savings(0.67, 0.2, PSG_FACTOR_PAPER)
     rows.append(csv_row(f"tab4/resnet{depth}_e2train",
                         wall2 / max(n2, 1) * 1e6,
-                        f"acc={acc2:.4f};savings={sav:.4f};paper=0.8027;"
-                        f"measured_psg_fallback={measured_fb}"))
+                        f"acc={acc2:.4f};{energy_fields(tr2, steps=steps)};"
+                        f"paper=0.8027;"
+                        f"measured_psg_fallback={tr2.measured_psg_fallback()}"))
 
     # MobileNetV2 (compact backbone, paper's last Tab. 4 block) — fwd-only
     # smoke at bench scale: verify the compact arch runs under the harness

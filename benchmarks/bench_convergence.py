@@ -1,14 +1,13 @@
 """Paper Fig. 5: convergence (loss) vs cumulative energy for SMB / SD /
-SLU / SLU+SMD / E²-Train."""
+SLU / SLU+SMD / E²-Train.  The per-step energy factor on the x-axis comes
+from the run's EnergyReport (measured SLU execution, measured PSG fallback
+→ 45nm factor), not an assumed constant."""
 from __future__ import annotations
 
 from typing import List
 
-import numpy as np
-
 from repro.core.config import (E2TrainConfig, PSGConfig, SLUConfig,
                                SMDConfig)
-from repro.core.energy import PSG_FACTOR_PAPER
 
 from benchmarks.common import csv_row, final_loss, run_lm
 
@@ -26,12 +25,16 @@ def run(fast: bool = True) -> List[str]:
     rows = []
     for tag, (e2, kw) in variants.items():
         hist, tr, wall = run_lm(e2, steps, **kw)
-        # per-executed-step energy factor for the x-axis
+        # per-executed-step energy factor for the x-axis, from measured
+        # telemetry (assumed operating point only where nothing measured)
+        rep = tr.energy_report(steps=steps)
         f = 1.0
-        if e2.slu.enabled:
-            f *= float(np.mean([h["slu_exec_ratio"] for h in hist[-10:]]))
+        if e2.slu.enabled and rep.slu.resolved() is not None:
+            f *= 1.0 - rep.slu.resolved()
         if e2.psg.enabled:
-            f *= PSG_FACTOR_PAPER
+            f *= (rep.psg_factor_measured
+                  if rep.psg_factor_measured is not None
+                  else rep.psg_factor_assumed)
         curve = [round(h["loss"], 3) for h in hist[:: max(len(hist) // 8, 1)]]
         rows.append(csv_row(
             f"fig5/{tag}", wall / max(len(hist), 1) * 1e6,

@@ -1,8 +1,11 @@
 """Paper Tab. 3/4: combined E²-Train (SMD+SLU+PSG) savings + accuracy.
 
-Reproduces the computational-savings column *exactly* via the composition
-law (validated against the paper's numbers in tests/test_energy.py) and
-measures accuracy at each operating point on the synthetic task.
+Each operating point is an ``E2TrainConfig`` (SMD drop 0.5 at the paper's
+epochs multiplier, SLU ``target_skip`` 20/40/60%); the savings columns come
+from ``Trainer.energy_report()`` — the config-derived paper composition
+(cross-checked against the published rows in tests/test_energy.py) next to
+the run's measured telemetry.  Accuracy is measured at each point on the
+synthetic task.
 """
 from __future__ import annotations
 
@@ -10,9 +13,9 @@ from typing import List
 
 from repro.core.config import (E2TrainConfig, PSGConfig, SLUConfig,
                                SMDConfig)
-from repro.core.energy import (PSG_FACTOR_PAPER, computational_savings)
 
-from benchmarks.common import csv_row, eval_accuracy, final_loss, run_lm
+from benchmarks.common import (csv_row, energy_fields, eval_accuracy,
+                               final_loss, run_lm)
 
 
 def run(fast: bool = True) -> List[str]:
@@ -22,15 +25,14 @@ def run(fast: bool = True) -> List[str]:
     for skip, alpha in ((0.2, 2e-3), (0.4, 1e-2), (0.6, 4e-2)):
         e2 = E2TrainConfig(
             smd=SMDConfig(enabled=True, drop_prob=0.5),
-            slu=SLUConfig(enabled=True, alpha=alpha,
+            slu=SLUConfig(enabled=True, alpha=alpha, target_skip=skip,
                           never_skip_first_last=False),
             psg=PSGConfig(enabled=True))
         hist, tr, wall = run_lm(e2, steps, lr=0.03, optimizer="psg")
-        comp = computational_savings(0.67, skip, PSG_FACTOR_PAPER)
         rows.append(csv_row(
             f"tab3/e2train_skip{int(skip*100)}",
             wall / max(tr.executed_steps, 1) * 1e6,
             f"loss={final_loss(hist):.4f};acc={eval_accuracy(tr):.4f};"
-            f"computational_saving={comp:.4f};"
+            f"{energy_fields(tr, steps=steps)};"
             f"paper={'0.8027' if skip == 0.2 else '0.8520' if skip == 0.4 else '0.9013'}"))
     return rows

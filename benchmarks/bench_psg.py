@@ -9,8 +9,7 @@ from __future__ import annotations
 from typing import List
 
 from repro.core.config import E2TrainConfig, PSGConfig
-from repro.core.energy import (FP32_MAC_PJ, mac_energy_pj, measured_psg_factor,
-                               psg_factor_from_energy_model)
+from repro.core.energy import FP32_MAC_PJ, mac_energy_pj
 
 from benchmarks.common import csv_row, eval_accuracy, final_loss, run_lm
 
@@ -43,18 +42,17 @@ def run(fast: bool = True) -> List[str]:
                         f"acc={eval_accuracy(tr):.4f};energy_saving=0.000"))
 
     # PSG (predictive sign, mixed precision, SWA) — energy saving from the
-    # *measured* fallback-tile ratio the backward kernel reported per step,
-    # alongside the 0.4-assumption design point.
+    # run's EnergyReport: the *measured* fallback-tile ratio the backward
+    # kernel reported per step, alongside the 0.4-assumption design point.
     e2_psg = E2TrainConfig(psg=PSGConfig(enabled=True))
     hist, tr, wall = run_lm(e2_psg, steps, lr=0.03, optimizer="psg")
-    fb = tr.measured_psg_fallback()
-    assert fb is not None, "PSG run produced no fallback measurements"
-    s_psg = 1 - psg_factor_from_energy_model()
-    s_meas = 1 - measured_psg_factor(e2_psg, fb)
+    rep = tr.energy_report(steps=steps)
+    assert rep.psg.measured is not None, \
+        "PSG run produced no fallback measurements"
     rows.append(csv_row("tab2/psg", wall / steps * 1e6,
                         f"loss={final_loss(hist):.4f};"
                         f"acc={eval_accuracy(tr):.4f};"
-                        f"energy_saving={s_psg:.3f};"
-                        f"measured_fallback={fb:.3f};"
-                        f"energy_saving_measured={s_meas:.3f}"))
+                        f"energy_saving={1 - rep.psg_factor_assumed:.3f};"
+                        f"measured_fallback={rep.psg.measured:.3f};"
+                        f"energy_saving_measured={1 - rep.psg_factor_measured:.3f}"))
     return rows

@@ -1,5 +1,7 @@
 """§Roofline: render the per-(arch x shape x mesh) roofline table from the
-dry-run artifact (dryrun_results.json).
+dry-run artifact (dryrun_results.json), plus an analytic single-chip table
+for the paper's CNN backbones priced by the per-layer cost model
+(``repro.tasks.cost_model`` — never transformer math for a CNN).
 
 For each cell: compute/memory/collective terms in seconds, dominant
 bottleneck, MODEL_FLOPS (6ND / 6N_active*D), useful-compute ratio, and a
@@ -52,6 +54,32 @@ def render(results_path: str = "dryrun_results.json") -> List[str]:
     return rows
 
 
+def render_cnn_analytic() -> List[str]:
+    """Single-chip roofline for the paper backbones from the CostModel —
+    no dry-run artifact needed (CNN steps fit one chip)."""
+    from repro.configs import paper_cnns
+    from repro.core.cost import BYTES_FP32
+    from repro.core.energy import roofline_terms
+    from repro.tasks import cost_model
+
+    rows = []
+    for factory in (paper_cnns.resnet74, paper_cnns.resnet110,
+                    paper_cnns.mobilenetv2):
+        exp = factory()
+        cost = cost_model(exp)
+        B = exp.train.global_batch
+        flops = 2.0 * cost.train_macs(B)
+        hbm_bytes = BYTES_FP32 * cost.moved_words(B)
+        r = roofline_terms(flops, hbm_bytes, coll_bytes=0.0, chips=1)
+        rows.append(
+            f"roofline/{cost.name}/train_cifar/1chip,{r['step_s']*1e6:.1f},"
+            f"compute_s={r['compute_s']:.2e};memory_s={r['memory_s']:.2e};"
+            f"bound={r['bottleneck']};macs={cost.fwd_macs():.3e};"
+            f"params={cost.param_count()};"
+            f"fix={SUGGEST[r['bottleneck']][:48]}")
+    return rows
+
+
 def run(fast: bool = True) -> List[str]:
     return render(os.path.join(os.path.dirname(__file__), "..",
-                               "dryrun_results.json"))
+                               "dryrun_results.json")) + render_cnn_analytic()

@@ -1,12 +1,59 @@
 """Benchmark driver — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs longer budgets.
+
+``--json [PATH]`` (default ``BENCH_energy.json``) instead records the
+energy trajectory: a short measured E²-Train run on the paper's ResNet
+through ``Trainer.energy_report()``, plus the config-derived Table 3 sweep
+for ResNet-74 — every field straight from :class:`EnergyReport`, so CI can
+diff the numbers PR over PR.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def energy_json(fast: bool = True) -> dict:
+    """EnergyReport fields for the trajectory record (see module doc)."""
+    import jax
+
+    from repro.configs.paper_cnns import cnn_model, resnet74
+    from repro.core.config import (E2TrainConfig, Experiment, PSGConfig,
+                                   SLUConfig, SMDConfig, TrainConfig)
+    from repro.core.ledger import EnergyLedger
+    from repro.data.synthetic import GaussianImageTask, make_image_batch
+    from repro.training.train_step import init_train_state
+    from repro.training.trainer import Trainer
+
+    # config-derived Table 3 sweep: ResNet-74 at the paper's three operating
+    # points, no training required — measured columns are null (≠ 0)
+    table3 = []
+    for skip in (0.2, 0.4, 0.6):
+        op = E2TrainConfig(smd=SMDConfig(enabled=True, drop_prob=0.5),
+                           slu=SLUConfig(enabled=True, target_skip=skip),
+                           psg=PSGConfig(enabled=True))
+        table3.append(EnergyLedger(resnet74(e2=op)).report().to_dict())
+
+    # measured: a short full-E²-Train CNN run through the shared Trainer
+    depth, steps = (14, 12) if fast else (26, 40)
+    e2 = E2TrainConfig(smd=SMDConfig(enabled=True, drop_prob=0.5),
+                       slu=SLUConfig(enabled=True, alpha=5e-3,
+                                     target_skip=0.2),
+                       psg=PSGConfig(enabled=True, swa=False))
+    exp = Experiment(model=cnn_model(f"resnet{depth}", depth), e2=e2,
+                     train=TrainConfig(global_batch=8, lr=0.03,
+                                       optimizer="psg", total_steps=steps,
+                                       schedule="constant"),
+                     task="cifar_cnn")
+    task = GaussianImageTask(num_classes=10, snr=2.0)
+    tr = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp),
+                 lambda s, sh: make_image_batch(task, 0, s, sh, 8))
+    tr.run(steps)
+    return {"table3_config_derived": table3,
+            "measured_run": tr.energy_report(steps=steps).to_dict()}
 
 
 def main(argv=None) -> None:
@@ -15,8 +62,18 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (smd,slu,psg,e2train,"
                          "cnn,convergence,kernels,roofline)")
+    ap.add_argument("--json", nargs="?", const="BENCH_energy.json",
+                    default=None, metavar="PATH",
+                    help="write the EnergyReport trajectory record to PATH "
+                         "and exit (skips the CSV benches)")
     args = ap.parse_args(argv)
     fast = not args.full
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(energy_json(fast=fast), f, indent=2)
+        print(f"wrote {args.json}", file=sys.stderr)
+        return
 
     from benchmarks import (bench_cnn, bench_convergence, bench_e2train,
                             bench_kernels, bench_psg, bench_slu, bench_smd,

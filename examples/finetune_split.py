@@ -21,7 +21,6 @@ import numpy as np
 
 from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
                                PSGConfig, SLUConfig, SMDConfig, TrainConfig)
-from repro.core.energy import PSG_FACTOR_PAPER
 from repro.data.synthetic import MarkovLMTask, make_lm_batch
 from repro.training.train_step import init_train_state
 from repro.training.trainer import Trainer
@@ -99,7 +98,14 @@ def main():
     l2 = eval_loss(tr2.state.params, TASK_B)
 
     e1 = 60 * 1.0
-    e2_cost = tr2.executed_steps * PSG_FACTOR_PAPER
+    # per-executed-step factor from the run's measured telemetry (PSG
+    # fallback tiles -> 45nm factor; SLU execution), via the ledger
+    rep = tr2.energy_report(steps=240)
+    factor = (rep.psg_factor_measured if rep.psg_factor_measured is not None
+              else rep.psg_factor_assumed)
+    if rep.slu.resolved() is not None:
+        factor *= 1.0 - rep.slu.resolved()
+    e2_cost = tr2.executed_steps * factor
     print(f"option 1 (standard FT):  loss on B = {l1:.4f}, "
           f"energy units = {e1:.0f}")
     print(f"option 2 (E2-Train FT):  loss on B = {l2:.4f}, "

@@ -105,6 +105,9 @@ def main():
               f"executed {trainer.executed_steps}, "
               f"SMD-dropped {trainer.dropped_steps}{extras}; "
               f"checkpoints in {args.ckpt}")
+        # the run's energy accounting: this run's telemetry composed with
+        # the per-layer cost model, measured next to assumed
+        print("\n" + trainer.energy_report(steps=args.steps).summary())
 
 
 if __name__ == "__main__":

@@ -127,7 +127,15 @@ class ModelConfig:
         return self.sliding_window > 0
 
     def param_count(self) -> int:
-        """Analytic parameter count (embedding + blocks + head)."""
+        """Analytic parameter count.
+
+        ``family="cnn"`` configs delegate to the per-layer CNN cost model
+        (``core/cost.py``) — the transformer arithmetic below has no CNN
+        meaning, and silently applying it was the seed repo's bug.
+        """
+        if self.family == "cnn":
+            from repro.core.cost import cnn_cost   # deferred: cost imports us
+            return cnn_cost(self).param_count()
         d, v = self.d_model, self.vocab_size
         hd = self.resolved_head_dim
         n = 0
@@ -205,6 +213,13 @@ class SMDConfig:
     enabled: bool = False
     drop_prob: float = 0.5            # paper default
     # 'replacement' sampling interpretation: each step independently dropped
+    # Protocol choice: run `epochs_multiplier` x the nominal epochs so SMD
+    # trades energy for accuracy at a declared operating point.  Executed
+    # compute relative to the baseline budget is
+    # `epochs_multiplier * (1 - drop_prob)`; the paper's Fig. 3a point is
+    # p=0.5, m=4/3 -> energy ratio 0.67.  Energy accounting derives the
+    # ratio from here (core/ledger.py) instead of hard-coding 1.3333.
+    epochs_multiplier: float = 4.0 / 3.0
 
 
 @dataclass(frozen=True)

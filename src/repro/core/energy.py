@@ -1,4 +1,4 @@
-"""Energy & FLOPs accounting — the paper's measurement substrate, in software.
+"""Energy & FLOPs primitives — the paper's measurement substrate, in software.
 
 The paper's quantitative pathway is: per-op energies from Horowitz (ISSCC'14,
 45nm CMOS, the paper's ref [59]) x op counts + data-movement bytes x per-byte
@@ -9,14 +9,25 @@ exists here, so this module *is* the measurement instrument:
   95/97/75% vs fp32" (§3.3) emerges from these numbers.
 * ``TPU_V5E`` — target-hardware constants for the roofline analysis
   (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI per the assignment).
-* Analytic FLOPs for every assigned arch/shape (MODEL_FLOPS = 6*N*D dense /
+* Analytic FLOPs for the transformer archs (MODEL_FLOPS = 6*N*D dense /
   6*N_active*D MoE, plus attention terms) — fed to EXPERIMENTS.md §Roofline.
+  ``family="cnn"`` configs delegate to the per-layer CNN cost model
+  (``core/cost.py``); the seed's silent transformer-math-for-CNNs path is
+  retired.
 * The paper's composition law for computational savings
   (Tables 3/4):   executed = smd_ratio * (1 - slu_skip) * psg_factor.
   The paper's rows (80.27/85.20/90.13 % at skip 20/40/60%) are reproduced by
   this law with the PSG mixed-precision compute factor r = 0.368 implied by
   the paper's numbers; our first-principles factor from ENERGY_45NM is
-  reported alongside (see benchmarks/bench_e2train.py).
+  reported alongside.
+
+This module is the *primitive* layer of the energy API (DESIGN.md §Energy):
+per-op tables and conversion laws only.  Per-layer op counts live in
+``core/cost.py`` (CostModel, resolved through ``repro.tasks``); composing
+measured telemetry into headline numbers lives in ``core/ledger.py``
+(EnergyLedger → EnergyReport, via ``Trainer.energy_report()``).  Callers
+should not hand-compose these functions with assumed operating points —
+that is the ledger's job.
 """
 from __future__ import annotations
 
@@ -97,6 +108,10 @@ def _mlp_flops(cfg: ModelConfig, S: int, d_ff: int) -> float:
 
 def block_fwd_flops(cfg: ModelConfig, kind: str, S: int, kv_len: int = 0) -> float:
     """Forward FLOPs of one block for S tokens (per batch element)."""
+    if cfg.family == "cnn":
+        raise ValueError(
+            f"{cfg.name!r} is a CNN config: it has no transformer blocks — "
+            "use core/cost.cnn_cost (DESIGN.md §Energy)")
     kv_len = kv_len or S
     d = cfg.d_model
     if kind in (BLOCK_ATTN, BLOCK_SHARED_ATTN):
@@ -129,6 +144,11 @@ def block_fwd_flops(cfg: ModelConfig, kind: str, S: int, kv_len: int = 0) -> flo
 
 
 def model_fwd_flops(cfg: ModelConfig, batch: int, S: int, kv_len: int = 0) -> float:
+    if cfg.family == "cnn":
+        # per-layer CNN cost model (conv/BN/shortcut); S is a token count
+        # for LMs and has no CNN meaning — images are fixed 32x32 CIFAR.
+        from repro.core.cost import cnn_cost
+        return float(batch) * 2.0 * cnn_cost(cfg).fwd_macs()
     per = sum(block_fwd_flops(cfg, k, S, kv_len) for k in cfg.blocks)
     if cfg.shared_attn_every:
         n_inv = cfg.num_layers // cfg.shared_attn_every
@@ -199,6 +219,20 @@ def measured_psg_factor(e2: E2TrainConfig, fallback_ratio: float) -> float:
         (p.bits_x, p.bits_g, p.bits_x_msb, p.bits_g_msb), fallback_ratio)
 
 
+def psg_mac_pj(psg, fallback_rate: float) -> float:
+    """Absolute per-MAC energy (pJ) of PSG training, averaged over the three
+    passes (fwd x·w, bwd-x g·w, bwd-w x·g with predictor + fallback share).
+
+    The normalized counterpart (divided by ``FP32_MAC_PJ``) is
+    :func:`psg_factor_from_energy_model`.
+    """
+    fwd = mac_energy_pj(psg.bits_x, psg.bits_x)
+    bwd_x = mac_energy_pj(psg.bits_g, psg.bits_x)
+    bwd_w = mac_energy_pj(psg.bits_x_msb, psg.bits_g_msb) \
+        + fallback_rate * mac_energy_pj(psg.bits_x, psg.bits_g)
+    return (fwd + bwd_x + bwd_w) / 3.0
+
+
 def training_energy_pj(cfg: ModelConfig, batch: int, S: int,
                        e2: E2TrainConfig, steps: int,
                        bits_default: int = 32,
@@ -206,17 +240,18 @@ def training_energy_pj(cfg: ModelConfig, batch: int, S: int,
                        ) -> float:
     """End-to-end training energy under the 45nm model (compute + movement).
 
+    A *primitive*: the SMD/SLU scaling comes from the config's declared
+    operating point (``smd.epochs_multiplier × (1 − drop_prob)``,
+    ``slu.target_skip``) — for accounting driven by what actually executed,
+    use ``Trainer.energy_report()`` (core/ledger.py) instead.
+
     ``psg_fallback_rate``: fraction of backward weight-gradient compute that
     ran the full-precision product — pass ``Trainer.measured_psg_fallback()``
     for measured-rather-than-assumed accounting.
     """
     macs = train_step_flops(cfg, batch, S) / 2.0
     if e2.psg.enabled:
-        fwd = mac_energy_pj(e2.psg.bits_x, e2.psg.bits_x)
-        bwd_x = mac_energy_pj(e2.psg.bits_g, e2.psg.bits_x)
-        bwd_w = mac_energy_pj(e2.psg.bits_x_msb, e2.psg.bits_g_msb) \
-            + psg_fallback_rate * mac_energy_pj(e2.psg.bits_x, e2.psg.bits_g)
-        mac_pj = (fwd + bwd_x + bwd_w) / 3.0
+        mac_pj = psg_mac_pj(e2.psg, psg_fallback_rate)
         move_bits = e2.psg.bits_x
     else:
         mac_pj = FP32_MAC_PJ if bits_default == 32 else mac_energy_pj(
@@ -224,13 +259,22 @@ def training_energy_pj(cfg: ModelConfig, batch: int, S: int,
         move_bits = bits_default
     compute = macs * mac_pj
     # data movement: every MAC's operands stream through SRAM once per tile
-    n_params = cfg.param_count()
-    moved_words = 3.0 * (n_params + batch * S * cfg.d_model * cfg.num_layers)
+    if cfg.family == "cnn":
+        from repro.core.cost import cnn_cost
+        moved_words = cnn_cost(cfg).moved_words(batch)
+    else:
+        n_params = cfg.param_count()
+        moved_words = 3.0 * (n_params
+                             + batch * S * cfg.d_model * cfg.num_layers)
     movement = moved_words * move_energy_pj(move_bits)
     per_step = compute + movement
     eff_steps = steps
     if e2.smd.enabled:
-        eff_steps = steps * (1 - e2.smd.drop_prob) * 1.3333   # paper op point
+        # config-derived operating point: m x the nominal epochs, each step
+        # kept with probability (1 - p).  The paper's Fig. 3a point
+        # (p=0.5, m=4/3 -> 0.67) is the SMDConfig default, not a constant
+        # baked in here.
+        eff_steps = steps * (1 - e2.smd.drop_prob) * e2.smd.epochs_multiplier
     slu_keep = 1.0
     if e2.slu.enabled and e2.slu.target_skip:
         slu_keep = 1.0 - e2.slu.target_skip

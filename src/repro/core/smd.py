@@ -16,6 +16,8 @@ reaches higher accuracy than the standard protocol, Fig. 3a).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -42,16 +44,19 @@ def smd_schedule(cfg: SMDConfig, seed: int, total_steps: int) -> np.ndarray:
                      for t in range(total_steps)])
 
 
-def expected_energy_ratio(cfg: SMDConfig, epochs_multiplier: float = 1.0) -> float:
+def expected_energy_ratio(cfg: SMDConfig,
+                          epochs_multiplier: Optional[float] = None) -> float:
     """Energy of SMD training relative to standard training.
 
     Running SMD for ``m x`` the nominal iterations costs ``m * (1 - p)``
-    of standard training's per-sample compute.  The paper's operating point
-    (Fig. 3a) is m=1.33, p=0.5 -> 0.67.
+    of standard training's per-sample compute.  ``m`` defaults to the
+    config's declared protocol (``cfg.epochs_multiplier``); the paper's
+    operating point (Fig. 3a) is m=4/3, p=0.5 -> 0.67.
     """
     if not cfg.enabled:
-        return epochs_multiplier
-    return epochs_multiplier * (1.0 - cfg.drop_prob)
+        return 1.0 if epochs_multiplier is None else epochs_multiplier
+    m = cfg.epochs_multiplier if epochs_multiplier is None else epochs_multiplier
+    return m * (1.0 - cfg.drop_prob)
 
 
 class SMDIterator:

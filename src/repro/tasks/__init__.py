@@ -19,6 +19,10 @@ Contract:
   trainer logs them as floats; microbatch accumulation means them).
 * ``make_predict(exp) -> predict(params, model_state, batch)`` — eval-mode
   logits: stored statistics, no RNG, no SLU sampling.
+* ``cost(exp) -> CostModel`` — the per-layer op-count model for the
+  experiment's architecture (``core/cost.py``): energy accounting resolves
+  through here (``cost_model(exp)``), so it prices what actually trains —
+  never transformer math for a CNN (DESIGN.md §Energy).
 
 Built-in tasks: ``"lm"`` (the generic transformer stack) and ``"cifar_cnn"``
 (the paper's ResNet-74/110 + MobileNetV2 backbones).
@@ -29,6 +33,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.core.config import Experiment
+from repro.core.cost import TableCostModel
 
 LossFn = Callable[..., Tuple[Any, Tuple[Dict[str, Any], Any]]]
 
@@ -39,6 +44,7 @@ class Task:
     init: Callable[[Any, Experiment], Tuple[Any, Any]]
     make_loss: Callable[[Experiment], LossFn]
     make_predict: Optional[Callable[[Experiment], Callable]] = None
+    cost: Optional[Callable[[Experiment], TableCostModel]] = None
 
 
 _REGISTRY: Dict[str, Task] = {}
@@ -63,6 +69,21 @@ def get_task(name: str) -> Task:
 def task_names() -> Tuple[str, ...]:
     _ensure_builtin()
     return tuple(sorted(_REGISTRY))
+
+
+def cost_model(exp: Experiment) -> TableCostModel:
+    """The experiment's per-layer cost model, resolved through its task.
+
+    This is the ONE entry point energy accounting uses to price an
+    experiment (core/ledger.py); a task without a cost model cannot be
+    priced, and that is an error — not a silent fallback to another
+    family's arithmetic.
+    """
+    task = get_task(exp.task)
+    if task.cost is None:
+        raise ValueError(f"task {task.name!r} registered no cost model; "
+                         "energy accounting cannot price this experiment")
+    return task.cost(exp)
 
 
 def _ensure_builtin() -> None:

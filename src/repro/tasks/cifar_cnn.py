@@ -63,6 +63,11 @@ def _make_predict(exp: Experiment):
     return predict
 
 
+def _cost(exp: Experiment):
+    from repro.core.cost import cnn_cost
+    return cnn_cost(exp.model)
+
+
 CIFAR_CNN_TASK = register(Task(name="cifar_cnn", init=_init,
                                make_loss=_make_loss,
-                               make_predict=_make_predict))
+                               make_predict=_make_predict, cost=_cost))

@@ -39,5 +39,10 @@ def _make_predict(exp: Experiment):
     return predict
 
 
+def _cost(exp: Experiment):
+    from repro.core.cost import lm_cost
+    return lm_cost(exp.model, exp.train.seq_len)
+
+
 LM_TASK = register(Task(name="lm", init=_init, make_loss=_make_loss,
-                        make_predict=_make_predict))
+                        make_predict=_make_predict, cost=_cost))

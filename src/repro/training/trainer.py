@@ -97,6 +97,16 @@ class Trainer:
                 if "psg_fallback_ratio" in h]
         return float(np.mean(vals)) if vals else None
 
+    def energy_report(self, steps: Optional[int] = None):
+        """The run's :class:`~repro.core.ledger.EnergyReport`: this run's
+        telemetry (SMD executed/dropped counts, SLU execution ratios, PSG
+        fallback-tile ratios) composed with the experiment's per-layer cost
+        model and the 45nm per-op tables — measured next to assumed
+        (DESIGN.md §Energy).  ``steps`` defaults to the config's nominal
+        ``total_steps`` budget."""
+        from repro.core.ledger import EnergyLedger
+        return EnergyLedger.from_trainer(self).report(steps=steps)
+
     def _save(self, step: int):
         from repro.ft.checkpoint import save_checkpoint
         save_checkpoint(self.ckpt_dir, self.state, step, async_save=True)

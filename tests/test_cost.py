@@ -1,0 +1,157 @@
+"""CostModel validation: the per-layer CNN cost model against independently
+computed MAC totals and the actual jax parameter trees (DESIGN.md §Energy).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnns import cnn_model
+from repro.core.config import E2TrainConfig, Experiment, ModelConfig
+from repro.core.cost import cnn_cost, lm_cost, mobilenet_cost, resnet_cost
+from repro.tasks import cost_model
+
+
+# ---------------------------------------------------------------------------
+# independent MAC computation (different code path from core/cost.py: a
+# literal walk of the CIFAR ResNet stage schedule)
+# ---------------------------------------------------------------------------
+
+
+def _resnet_conv_fc_macs_independent(depth: int, width: int = 16,
+                                     image: int = 32, classes: int = 10) -> int:
+    n = (depth - 2) // 6
+    macs = image * image * 9 * 3 * width                       # stem
+    hw, cin = image, width
+    for stage in range(3):
+        cout = width * (2 ** stage)
+        for b in range(n):
+            if stage > 0 and b == 0:
+                hw //= 2
+            macs += hw * hw * 9 * cin * cout                   # conv1
+            macs += hw * hw * 9 * cout * cout                  # conv2
+            if cin != cout:
+                macs += hw * hw * cin * cout                   # 1x1 down
+            cin = cout
+    return macs + 4 * width * classes                          # fc
+
+
+@pytest.mark.parametrize("depth,want", [
+    # the literature's well-known CIFAR ResNet figures: ResNet-110 is the
+    # "253 MFLOPs" model (MACs), ResNet-74 scales to ~168M
+    (74, 168_215_168),
+    (110, 253_149_824),
+])
+def test_resnet_mac_totals_pinned(depth, want):
+    cost = resnet_cost(cnn_model(f"resnet{depth}", depth))
+    conv_fc = sum(l.macs for l in cost.layers if l.kind in ("conv", "fc"))
+    assert conv_fc == want
+    assert conv_fc == _resnet_conv_fc_macs_independent(depth)
+    # BN adds ~1% on top; total stays in the same ballpark
+    assert conv_fc < cost.fwd_macs() < conv_fc * 1.02
+
+
+def test_resnet_param_count_matches_jax_tree():
+    """Leaf-by-leaf ground truth: the cost table's parameter total equals
+    the actual init tree (SLU gate excluded — it is an E2-Train add-on, not
+    backbone cost)."""
+    from repro.models import resnet as R
+    for depth in (14, 26):
+        p, _ = R.init_resnet(jax.random.PRNGKey(0), depth,
+                             e2=E2TrainConfig())   # slu off -> no gate
+        tree_n = sum(np.size(x) for x in jax.tree.leaves(p))
+        assert cnn_cost(cnn_model(f"resnet{depth}", depth)).param_count() \
+            == tree_n
+
+
+def test_resnet110_param_count_well_known():
+    """ResNet-110 on CIFAR-10 is the 1.7M-parameter model."""
+    n = cnn_cost(cnn_model("resnet110", 110)).param_count()
+    assert abs(n - 1.73e6) < 0.03e6
+
+
+def test_mobilenet_param_count_matches_jax_tree():
+    from repro.models import resnet as R
+    p, _ = R.init_mobilenetv2(jax.random.PRNGKey(0))
+    tree_n = sum(np.size(x) for x in jax.tree.leaves(p))
+    assert mobilenet_cost(cnn_model("mobilenetv2", 0)).param_count() == tree_n
+
+
+def test_mbv2_layout_matches_model_table():
+    """core/cost.py restates MBV2_CFG (core must not import models); pin the
+    two tables against each other so they cannot drift."""
+    from repro.core import cost as C
+    from repro.models import resnet as R
+    assert C.MBV2_CFG == R.MBV2_CFG
+
+
+def test_gated_fraction_excludes_projection_transitions():
+    """SLU gates identity-shortcut blocks only: the projection transitions
+    of stages 1/2, the stem, and the fc must not be gated (models/resnet.py
+    semantics)."""
+    cost = resnet_cost(cnn_model("resnet74", 74))
+    by_name = {l.name: l for l in cost.layers}
+    assert not by_name["stem"].gated
+    assert not by_name["fc"].gated
+    assert by_name["s0b0.conv1"].gated          # stage-0 transition: identity
+    assert not by_name["s1b0.conv1"].gated      # projection transition
+    assert not by_name["s2b0.conv1"].gated
+    assert by_name["s1b1.conv1"].gated
+    assert 0.9 < cost.gated_fraction() < 1.0
+
+
+def test_slu_exec_scales_train_macs_and_movement():
+    cost = resnet_cost(cnn_model("resnet74", 74))
+    full = cost.train_macs(8, slu_exec=1.0)
+    half = cost.train_macs(8, slu_exec=0.5)
+    assert half < full
+    assert abs(full - 3 * 8 * cost.fwd_macs()) < 1e-6
+    assert cost.moved_words(8, slu_exec=0.5) < cost.moved_words(8)
+
+
+# ---------------------------------------------------------------------------
+# LM cost model + registry resolution + delegation (no silent CNN lies)
+# ---------------------------------------------------------------------------
+
+
+LM = ModelConfig(name="t", family="dense", num_layers=4, d_model=256,
+                 num_heads=8, num_kv_heads=8, d_ff=1024, vocab_size=1000)
+
+
+def test_lm_cost_matches_analytic_flops():
+    from repro.core.energy import model_fwd_flops
+    cost = lm_cost(LM, 128)
+    assert abs(cost.fwd_macs() - model_fwd_flops(LM, 1, 128) / 2.0) < 1.0
+    # blocks are SLU-gatable; embedding/head are not
+    assert 0.0 < cost.gated_fraction() < 1.0
+
+
+def test_cost_resolves_through_task_registry():
+    cnn_exp = Experiment(model=cnn_model("resnet74", 74), task="cifar_cnn")
+    assert cost_model(cnn_exp).fwd_macs() > 1e8
+    lm_exp = Experiment(model=LM, task="lm")
+    assert cost_model(lm_exp).param_count() > 0
+    # the two tasks price through different models
+    assert cost_model(cnn_exp).name == "resnet74"
+
+
+def test_cnn_param_count_delegates_not_transformer_math():
+    """Satellite: ModelConfig.param_count for family="cnn" must return the
+    CNN count (≈1.15M for ResNet-74), not transformer-block arithmetic."""
+    m = cnn_model("resnet74", 74)
+    assert m.param_count() == cnn_cost(m).param_count()
+    assert abs(m.param_count() - 1.147e6) < 0.01e6
+
+
+def test_cnn_fwd_flops_delegates():
+    from repro.core.energy import block_fwd_flops, model_fwd_flops
+    m = cnn_model("resnet74", 74)
+    assert model_fwd_flops(m, 2, 0) == 2 * 2.0 * cnn_cost(m).fwd_macs()
+    with pytest.raises(ValueError):
+        block_fwd_flops(m, "attn", 32)   # no transformer blocks in a CNN
+    with pytest.raises(ValueError):
+        lm_cost(m, 32)
+
+
+def test_cnn_cost_rejects_non_cnn():
+    with pytest.raises(ValueError):
+        cnn_cost(LM)

@@ -161,3 +161,45 @@ def test_computational_savings_monotone(smd, skip):
     s = computational_savings(smd, skip)
     assert 0.0 <= s <= 1.0
     assert computational_savings(smd, min(skip + 0.05, 0.95)) >= s
+
+
+# ---------------------------------------------------------------------------
+# EnergyReport (ledger) monotonicity in measured telemetry
+# ---------------------------------------------------------------------------
+
+
+def _measured_report(slu_exec: float, psg_fb: float):
+    from repro.configs.paper_cnns import resnet74
+    from repro.core.config import (E2TrainConfig, PSGConfig, SLUConfig,
+                                   SMDConfig)
+    from repro.core.ledger import EnergyLedger
+    e2 = E2TrainConfig(smd=SMDConfig(enabled=True, drop_prob=0.5),
+                       slu=SLUConfig(enabled=True, target_skip=0.2),
+                       psg=PSGConfig(enabled=True))
+    led = EnergyLedger(resnet74(e2=e2))
+    for _ in range(4):
+        led.record_step({"slu_exec_ratio": slu_exec,
+                         "psg_fallback_ratio": psg_fb})
+    for _ in range(4):
+        led.record_dropped()
+    return led.report(steps=8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(ex=st.floats(0.1, 0.9), fb=st.floats(0.0, 0.9))
+def test_energy_report_monotone_in_slu_skip_and_psg_fallback(ex, fb):
+    """More SLU skipping (lower execution) -> more savings; more PSG
+    fallback (full-precision products) -> less savings.  Holds for both the
+    composition (MAC) and the 45nm (pJ) columns."""
+    base = _measured_report(ex, fb)
+    more_skip = _measured_report(max(ex - 0.05, 0.0), fb)
+    more_fb = _measured_report(ex, min(fb + 0.05, 1.0))
+    for a in (base, more_skip, more_fb):
+        assert 0.0 <= a.computational_savings_measured <= 1.0
+        assert a.energy_savings_measured is not None
+    assert more_skip.computational_savings_measured >= \
+        base.computational_savings_measured
+    assert more_skip.energy_savings_measured >= base.energy_savings_measured
+    assert more_fb.computational_savings_measured <= \
+        base.computational_savings_measured
+    assert more_fb.energy_savings_measured <= base.energy_savings_measured

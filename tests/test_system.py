@@ -136,9 +136,11 @@ def test_resnet14_converges_through_trainer():
 def test_resnet74_full_e2train_through_trainer():
     """Acceptance: ResNet-74 (CIFAR shapes) end-to-end with SMD+SLU+PSG via
     the Trainer — measured psg_fallback_ratio and a non-trivial
-    slu_exec_ratio come out of the shared metrics path."""
+    slu_exec_ratio come out of the shared metrics path, and the run's
+    EnergyLedger reproduces the paper's Table 3 composition from
+    config-derived inputs with a measured column next to it."""
     e2 = E2TrainConfig(smd=SMDConfig(True, 0.5),
-                       slu=SLUConfig(True, alpha=0.01),
+                       slu=SLUConfig(True, alpha=0.01, target_skip=0.2),
                        psg=PSGConfig(True, swa=False))
     exp = _cnn_exp(74, e2, global_batch=4, total_steps=6)
     state = init_train_state(jax.random.PRNGKey(0), exp)
@@ -153,6 +155,21 @@ def test_resnet74_full_e2train_through_trainer():
     # BN running stats moved off their init under the shared stack
     stem = tr.state.model_state["stem_bn"]
     assert float(np.abs(np.asarray(stem["mean"])).max()) > 0.0
+
+    # --- EnergyLedger acceptance: the run reproduces Table 3's 20%-skip
+    # row from the config's operating point (drop 0.5 x m=4/3, skip 0.2)
+    # and reports what this run actually measured next to it ---
+    rep = tr.energy_report()
+    assert abs(rep.paper_composition - 0.8027) < 2e-3
+    assert rep.smd.measured is not None          # executed/dropped counts
+    assert abs(rep.slu.measured - (1.0 - ex)) < 1e-6
+    assert abs(rep.psg.measured - fb) < 1e-6
+    assert rep.computational_savings_measured is not None
+    assert 0.0 < rep.computational_savings_measured < 1.0
+    assert rep.energy_savings_measured is not None
+    # the CNN is priced by the per-layer cost model, not transformer math
+    assert abs(rep.fwd_macs_per_example - 168.9e6) < 2e6
+    assert abs(rep.params - 1.147e6) < 0.01e6
 
 
 def test_resnet110_trace_time_budget():

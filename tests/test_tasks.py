@@ -100,6 +100,15 @@ def test_psg_fallback_ratio_emitted(task_name):
         assert 0.0 <= h["psg_fallback_ratio"] <= 1.0
     assert tr.measured_psg_fallback() is not None
 
+    # one-call energy accounting rides the same registry path for both
+    # tasks: the report prices the experiment through Task.cost and carries
+    # this run's fallback measurement
+    rep = tr.energy_report()
+    assert rep.task == task_name
+    assert rep.fwd_macs_per_example > 0 and rep.params > 0
+    assert abs(rep.psg.measured - tr.measured_psg_fallback()) < 1e-6
+    assert rep.computational_savings_measured is not None
+
 
 def test_microbatch_accumulation_threads_model_state():
     """Grad accumulation carries the CNN's BN state through the microbatch
