@@ -7,13 +7,23 @@ energy trajectory: a short measured E²-Train run on the paper's ResNet
 through ``Trainer.energy_report()``, plus the config-derived Table 3 sweep
 for ResNet-74 — every field straight from :class:`EnergyReport`, so CI can
 diff the numbers PR over PR.
+
+``--json-throughput [PATH]`` (default ``BENCH_throughput.json``) records
+the loop-throughput trajectory: executed steps/s of the per-step vs
+chunked loop and the chunk speedup on the depth-14 ResNet CPU configs
+(benchmarks/bench_throughput.py).  CI uploads both BENCH JSONs.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
+
+# invoked as `python benchmarks/run.py`: sys.path[0] is benchmarks/, so put
+# the repo root there too for the `from benchmarks import ...` bench imports
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def energy_json(fast: bool = True) -> dict:
@@ -61,23 +71,35 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (smd,slu,psg,e2train,"
-                         "cnn,convergence,kernels,roofline)")
+                         "cnn,convergence,kernels,throughput,roofline)")
     ap.add_argument("--json", nargs="?", const="BENCH_energy.json",
                     default=None, metavar="PATH",
                     help="write the EnergyReport trajectory record to PATH "
                          "and exit (skips the CSV benches)")
+    ap.add_argument("--json-throughput", nargs="?",
+                    const="BENCH_throughput.json", default=None,
+                    metavar="PATH",
+                    help="write the chunked-loop throughput record "
+                         "(steps/s per-step vs chunked + speedup) to PATH "
+                         "and exit (skips the CSV benches)")
     args = ap.parse_args(argv)
     fast = not args.full
 
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump(energy_json(fast=fast), f, indent=2)
-        print(f"wrote {args.json}", file=sys.stderr)
+    if args.json or args.json_throughput:    # not exclusive: write both
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(energy_json(fast=fast), f, indent=2)
+            print(f"wrote {args.json}", file=sys.stderr)
+        if args.json_throughput:
+            from benchmarks.bench_throughput import throughput_json
+            with open(args.json_throughput, "w") as f:
+                json.dump(throughput_json(fast=fast), f, indent=2)
+            print(f"wrote {args.json_throughput}", file=sys.stderr)
         return
 
     from benchmarks import (bench_cnn, bench_convergence, bench_e2train,
                             bench_kernels, bench_psg, bench_slu, bench_smd,
-                            roofline)
+                            bench_throughput, roofline)
 
     benches = {
         "smd": bench_smd.run,           # Fig. 3a/3b, Tab. 1
@@ -87,6 +109,7 @@ def main(argv=None) -> None:
         "cnn": bench_cnn.run,           # Tab. 4 (paper backbones)
         "convergence": bench_convergence.run,  # Fig. 5
         "kernels": bench_kernels.run,
+        "throughput": bench_throughput.run,  # §Loop (chunked vs per-step)
         "roofline": roofline.run,       # §Roofline (from dry-run artifact)
     }
     only = set(args.only.split(",")) if args.only else set(benches)

@@ -5,10 +5,19 @@ task — the ~100M-param LM or the paper's CIFAR ResNet.
     PYTHONPATH=src python examples/train_e2e.py --steps 200
     PYTHONPATH=src python examples/train_e2e.py --steps 300 --resume
     PYTHONPATH=src python examples/train_e2e.py --task cifar_cnn --depth 14
+    PYTHONPATH=src python examples/train_e2e.py --tiny --chunk-steps 8
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 PYTHONPATH=src \
+        python examples/train_e2e.py --tiny --chunk-steps 4 --mesh 2
 
 By default uses a ~100M-parameter llama-style config; --tiny shrinks it for
 fast CI runs.  Both tasks run the SAME Trainer/train_step stack — the task
-registry (repro.tasks) supplies init/loss.
+registry (repro.tasks) supplies init/loss.  ``--chunk-steps K`` switches to
+the compiled chunked loop (DESIGN.md §Loop: one lax.scan program per K
+executed steps, prefetched data, chunk-boundary metric syncs); ``--mesh N``
+adds N-way data-parallel execution and fails fast when fewer than N
+devices are visible (on CPU, export
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first — it must be
+set before the JAX backend initializes, so the script can't do it for you).
 """
 import argparse
 import os
@@ -54,7 +63,19 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--depth", type=int, default=74,
                     help="CIFAR ResNet depth (6n+2) for --task cifar_cnn")
+    ap.add_argument("--chunk-steps", type=int, default=1,
+                    help="compile K executed steps into one device program "
+                         "(1 = per-step reference loop)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="N-way data-parallel mesh over the batch axis "
+                         "(0 = single device)")
     args = ap.parse_args()
+    if args.mesh > 1 and jax.device_count() < args.mesh:
+        raise SystemExit(
+            f"--mesh {args.mesh} needs {args.mesh} devices but only "
+            f"{jax.device_count()} are visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={args.mesh} for the "
+            "CPU demo")
     if args.ckpt is None:
         args.ckpt = f"/tmp/e2train_ckpt_{args.task}"
 
@@ -92,19 +113,31 @@ def main():
         state = jax.tree.map(jax.numpy.asarray, tree)
         print(f"resumed from checkpoint at step {step}")
 
+    mesh = None
+    if args.mesh > 1:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((args.mesh, 1), ("data", "model"))
+        print(f"mesh: {args.mesh}-way data parallel over {mesh.devices.size} "
+              "devices")
     trainer = Trainer(exp, state, make_batch, checkpoint_dir=args.ckpt,
-                      checkpoint_every=50, deadline_s=30.0)
+                      checkpoint_every=50, deadline_s=30.0,
+                      chunk_steps=args.chunk_steps, mesh=mesh)
     hist = trainer.run(args.steps, log_every=10)
     if hist:
         extras = ""
         fb = trainer.measured_psg_fallback()
         if fb is not None:
             extras = f"; measured PSG fallback {fb:.3f}"
+        sps = trainer.steps_per_s()
+        loop = (f"chunked K={args.chunk_steps}" if args.chunk_steps > 1
+                or mesh is not None else "per-step")
         print(f"\nfinal loss {np.mean([h['loss'] for h in hist[-5:]]):.4f} "
               f"(bayes floor {bayes}); "
               f"executed {trainer.executed_steps}, "
               f"SMD-dropped {trainer.dropped_steps}{extras}; "
               f"checkpoints in {args.ckpt}")
+        if sps:
+            print(f"throughput: {sps:.2f} executed steps/s ({loop} loop)")
         # the run's energy accounting: this run's telemetry composed with
         # the per-layer cost model, measured next to assumed
         print("\n" + trainer.energy_report(steps=args.steps).summary())

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Callable, Dict, Iterator, Optional
 
 import jax
@@ -56,11 +57,35 @@ class DataPipeline:
 
     def __next__(self):
         while True:
-            item = self._q.get()
-            return item                             # (step, batch | None)
+            if self._stop.is_set():
+                raise StopIteration
+            try:
+                return self._q.get(timeout=0.1)     # (step, batch | None)
+            except queue.Empty:
+                continue
 
-    def close(self):
+    def close(self, timeout: float = 5.0) -> bool:
+        """Stop the producer and join it.
+
+        Draining the queue once is not enough: the producer may be parked in
+        ``put`` with a ready item and complete the put right after the
+        drain, then go generate the next batch — a shutdown race that leaves
+        the thread alive holding references.  So: signal stop, then
+        alternate drain + short join until the thread exits (it re-checks
+        the stop flag at least every 0.1 s put timeout).  Returns whether
+        the producer actually terminated within ``timeout``.
+        """
         self._stop.set()
+        deadline = time.monotonic() + timeout
+        while self._thread.is_alive():
+            self._drain()
+            self._thread.join(timeout=0.05)
+            if time.monotonic() > deadline:
+                break
+        self._drain()                    # a post-join straggler put
+        return not self._thread.is_alive()
+
+    def _drain(self):
         try:
             while True:
                 self._q.get_nowait()

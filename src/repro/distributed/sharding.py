@@ -280,23 +280,51 @@ def param_shardings(params_shape, mesh: Mesh, fsdp: bool = True):
     return jax.tree_util.tree_map_with_path(one, params_shape)
 
 
-def batch_sharding(mesh: Mesh, ndim: int = 2, seq_shard: bool = False,
-                   shape: Optional[Tuple[int, ...]] = None):
-    """Tokens/labels (B, S, ...): batch over pod+data, optionally S over
-    model.  Axes that do not divide the dimension are dropped (e.g. the
-    long_500k cell's global_batch=1)."""
+def batch_sharding(mesh: Mesh, batch: Any = 2, seq_shard: bool = False,
+                   shape: Optional[Tuple[int, ...]] = None,
+                   batch_axis: int = 0):
+    """Data-batch sharding: the batch axis over pod+data, optionally the
+    following (sequence) axis over model.  Axes that do not divide the
+    dimension are dropped (e.g. the long_500k cell's global_batch=1).
+
+    ``batch`` is either an int rank (the classic single-leaf call, with the
+    optional concrete ``shape`` for divisibility checks) or a *batch pytree*
+    (dict batches): rank and shape are then inferred per leaf — rank-1
+    labels, rank-2 token batches, rank-4 NHWC CIFAR images, and their
+    rank+1 chunk-stacked forms all resolve from one call.  ``batch_axis``
+    points at the batch dimension (1 for chunk-stacked batches, where axis
+    0 is the scan/K axis and stays unsharded — every device runs every
+    scan step).
+    """
+    if isinstance(batch, int):
+        return _leaf_batch_sharding(mesh, batch, shape, seq_shard, batch_axis)
+
+    def one(leaf):
+        shp = tuple(np.shape(leaf))
+        return _leaf_batch_sharding(mesh, len(shp), shp, seq_shard,
+                                    batch_axis)
+
+    return jax.tree.map(one, batch)
+
+
+def _leaf_batch_sharding(mesh: Mesh, ndim: int,
+                         shape: Optional[Tuple[int, ...]],
+                         seq_shard: bool, batch_axis: int) -> NamedSharding:
+    if batch_axis >= ndim:
+        return NamedSharding(mesh, P(*([None] * ndim)))
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     bsize = int(np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes else 1
-    if shape is not None and (bsize <= 1 or shape[0] % bsize != 0):
+    if bsize <= 1 or (shape is not None and shape[batch_axis] % bsize != 0):
         batch_axes = ()
-    axes: list = [batch_axes if len(batch_axes) > 1 else
-                  (batch_axes[0] if batch_axes else None)]
-    if seq_shard and "model" in mesh.axis_names and ndim >= 2:
+    axes: list = [None] * ndim
+    axes[batch_axis] = (batch_axes if len(batch_axes) > 1 else
+                        (batch_axes[0] if batch_axes else None))
+    seq_axis = batch_axis + 1
+    if seq_shard and "model" in mesh.axis_names and ndim > seq_axis:
         msize = mesh.shape["model"]
-        if shape is None or (len(shape) > 1 and shape[1] % msize == 0):
-            axes.append("model")
-    axes += [None] * (ndim - len(axes))
-    return NamedSharding(mesh, P(*axes[:ndim]))
+        if shape is None or shape[seq_axis] % msize == 0:
+            axes[seq_axis] = "model"
+    return NamedSharding(mesh, P(*axes))
 
 
 def state_shardings(state_shape, mesh: Mesh, fsdp: bool = True):

@@ -89,6 +89,22 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def resume_chunk_start(ckpt_dir: str,
+                       step: Optional[int] = None) -> Optional[int]:
+    """First nominal step a resumed run executes — the chunk boundary
+    derived from the saved step.
+
+    The chunked loop (training/loop.py) saves only at chunk boundaries and
+    plans chunks *relative to the start step*, so the boundary after a save
+    at nominal step ``s`` is exactly ``s + 1``: a resumed chunked run and
+    an uninterrupted one see identical chunk layouts from that point (the
+    parity property tests/test_loop.py pins).  Returns ``None`` when the
+    directory holds no checkpoint, so callers can distinguish "fresh run"
+    from "resume at step 0"."""
+    s = step if step is not None else latest_step(ckpt_dir)
+    return None if s is None else s + 1
+
+
 def restore_checkpoint(ckpt_dir: str, like: Any,
                        step: Optional[int] = None) -> Tuple[Any, int]:
     """Restore into the structure of ``like`` (validates shapes/dtypes)."""

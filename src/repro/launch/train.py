@@ -32,6 +32,12 @@ def main(argv=None):
     ap.add_argument("--devices", type=int, default=0,
                     help="force host platform device count (testing)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--chunk-steps", type=int, default=1,
+                    help="compile K executed steps into one device program "
+                         "(DESIGN.md §Loop; 1 = per-step loop)")
+    ap.add_argument("--mesh-data", type=int, default=0, metavar="N",
+                    help="N-way data-parallel mesh over the batch axis "
+                         "(0 = single device; combine with --devices N)")
     args = ap.parse_args(argv)
 
     if args.devices:
@@ -84,13 +90,21 @@ def main(argv=None):
         state = jax.tree.map(lambda a, b: b, state, tree)
         print(f"resumed from step {step}")
 
+    mesh = None
+    if args.mesh_data > 1:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((args.mesh_data, 1), ("data", "model"))
     trainer = Trainer(exp, state, make_batch, checkpoint_dir=args.ckpt,
-                      checkpoint_every=args.ckpt_every)
+                      checkpoint_every=args.ckpt_every,
+                      chunk_steps=args.chunk_steps, mesh=mesh)
     hist = trainer.run(args.steps, log_every=args.log_every)
     if hist:
+        sps = trainer.steps_per_s()
         print(f"final loss: {hist[-1]['total_loss']:.4f} "
               f"(executed {trainer.executed_steps}, "
-              f"SMD-dropped {trainer.dropped_steps})")
+              f"SMD-dropped {trainer.dropped_steps}, "
+              f"{sps:.2f} steps/s)" if sps else
+              f"final loss: {hist[-1]['total_loss']:.4f}")
     return 0
 
 

@@ -1,2 +1,3 @@
 from repro.training.train_step import make_train_step, TrainState
+from repro.training.loop import ChunkPlanner, make_chunk_step, stack_batches
 from repro.training.trainer import Trainer

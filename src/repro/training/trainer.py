@@ -1,28 +1,52 @@
 """Training loop orchestration: SMD, checkpoints, straggler policy, metrics.
 
-The loop is deliberately thin — all compute lives in the jitted train_step,
-and everything model-specific lives behind the ``repro.tasks`` registry, so
-the same loop trains the transformer LM stack and the paper's CIFAR CNNs
-(there is no other training loop in the repo) — and deals with the
-operational concerns of a long-running multi-pod job:
+All compute lives in jitted device programs and everything model-specific
+lives behind the ``repro.tasks`` registry, so the same loop trains the
+transformer LM stack and the paper's CIFAR CNNs (there is no other
+training loop in the repo).  Two execution modes share one Trainer
+(DESIGN.md §Loop):
 
-* SMD-dropped steps advance the step counter without compute or data fetch;
+* **per-step** (``chunk_steps=1``, no mesh): one jitted train_step per
+  Python iteration, metrics synced every step — the reference loop the
+  chunked mode is parity-tested against;
+* **chunked** (``chunk_steps=K>1`` or ``mesh=...``): K executed steps
+  compile into one ``lax.scan`` program (``training/loop.py``); batches
+  come from ``data/pipeline.py``'s background prefetch thread and are
+  ``jax.device_put`` while the previous chunk still runs; metrics stay
+  device-resident and sync once per chunk boundary.  With ``mesh=...``
+  the stacked batch is sharded along its batch axis
+  (``distributed/sharding.batch_sharding``) and the TrainState is
+  replicated/FSDP-sharded (``state_shardings``) — data-parallel execution
+  with counter-based per-shard batch generation, no host data exchange.
+
+Operational concerns of a long-running multi-pod job, in both modes:
+
+* SMD-dropped steps advance the step counter without compute or data fetch
+  (decided host-side from the counter-based schedule; in chunked mode the
+  drops never even reach the device — they ride along as per-executed-step
+  ``step_increment`` values);
 * periodic + final checkpoints via ``repro.ft.checkpoint`` (async save);
-* a straggler hook: if a step exceeds ``deadline_s`` (observed on this
-  host), the *next* step is pre-declared droppable — the SMD machinery makes
-  that sound (DESIGN.md §7).  On real multi-host deployments the deadline
-  check runs per-host against the shared counter-based SMD schedule.
+  in chunked mode the cadence is evaluated at chunk granularity and saves
+  land on chunk boundaries (``repro.ft.checkpoint.resume_chunk_start``);
+* a straggler hook: if a step (per-step mode) or a chunk's mean executed
+  step (chunked mode) exceeds ``deadline_s`` observed on this host, the
+  next kept step is pre-declared droppable — the SMD machinery makes that
+  sound (DESIGN.md §7).  On real multi-host deployments the deadline check
+  runs per-host against the shared counter-based SMD schedule.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import Experiment
 from repro.core.smd import smd_keep_host
+from repro.training.loop import ChunkPlanner, make_chunk_step
 from repro.training.train_step import TrainState, make_train_step
 
 
@@ -32,21 +56,47 @@ class Trainer:
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 0,
                  deadline_s: float = 0.0,
-                 shard: int = 0):
+                 shard: int = 0,
+                 chunk_steps: int = 1,
+                 mesh: Optional[Any] = None,
+                 prefetch: int = 2):
         self.exp = exp
-        self.state = state
         self.make_batch = make_batch
         self.step_fn = jax.jit(make_train_step(exp), donate_argnums=(0,))
         self.ckpt_dir = checkpoint_dir
         self.ckpt_every = checkpoint_every
         self.deadline_s = deadline_s
         self.shard = shard
+        self.chunk_steps = max(int(chunk_steps), 1)
+        self.mesh = mesh
+        self.prefetch = prefetch
         self.history: List[Dict[str, float]] = []
         self._straggler_pending = False
+        self._last_sync_t = 0.0
         self.executed_steps = 0
         self.dropped_steps = 0
+        self._chunk_fn = None           # built lazily (chunked mode only)
+        if mesh is not None:
+            from repro.distributed.sharding import state_shardings
+            state = jax.device_put(state, state_shardings(state, mesh))
+        self.state = state
+
+    # ------------------------------------------------------------------
+    # entry point
+    # ------------------------------------------------------------------
 
     def run(self, num_steps: int, log_every: int = 0) -> List[Dict[str, float]]:
+        if self.chunk_steps > 1 or self.mesh is not None:
+            return self._run_chunked(num_steps, log_every)
+        return self._run_per_step(num_steps, log_every)
+
+    # ------------------------------------------------------------------
+    # per-step reference loop (chunk_steps=1): one dispatch + one metrics
+    # sync per executed step
+    # ------------------------------------------------------------------
+
+    def _run_per_step(self, num_steps: int,
+                      log_every: int = 0) -> List[Dict[str, float]]:
         e2 = self.exp.e2
         for _ in range(num_steps):
             step = int(self.state.step)
@@ -79,14 +129,156 @@ class Trainer:
             if log_every and step % log_every == 0:
                 print(f"step {step}: loss={metrics.get('total_loss', 0):.4f} "
                       f"({dt*1e3:.0f} ms)")
-        if self.ckpt_dir:
-            self._save(int(self.state.step) - 1)
-            # the final save must survive process exit: async writers are
-            # daemon threads, and an orphaned write leaves a stale .tmp
-            # (and no checkpoint) for the next --resume to trip over
-            from repro.ft.checkpoint import wait_for_saves
-            wait_for_saves()
+        self._final_save()
         return self.history
+
+    # ------------------------------------------------------------------
+    # chunked loop: K executed steps per device program, prefetched data,
+    # chunk-boundary metric syncs, optional mesh data-parallelism
+    # ------------------------------------------------------------------
+
+    def _run_chunked(self, num_steps: int,
+                     log_every: int = 0) -> List[Dict[str, float]]:
+        from repro.data.pipeline import DataPipeline
+
+        if self._chunk_fn is None:
+            # NO donate_argnums here: donating the carried TrainState lets
+            # XLA CPU rewrite the scanned body in place, which changes
+            # fusion and breaks the bit-for-bit parity with the per-step
+            # loop that tests/test_loop.py pins (measured: losses drift in
+            # the 4th decimal from the second in-chunk step onward).  The
+            # cost is one extra TrainState copy per chunk — revisit per
+            # backend when an accelerator profile shows it matters.
+            self._chunk_fn = jax.jit(make_chunk_step(self.exp))
+        planner = ChunkPlanner(self.chunk_steps)
+        self._last_sync_t = 0.0
+        start = int(self.state.step)
+        pipe = DataPipeline(self.make_batch, self.exp.e2.smd,
+                            seed=self.exp.train.seed, shard=self.shard,
+                            prefetch=self.prefetch, start_step=start)
+        # one-chunk pipeline: while chunk N runs on device, chunk N+1 is
+        # assembled from the prefetch queue and device_put (double-buffer);
+        # chunk N's metrics sync when N+1 has been dispatched
+        in_flight = None                  # (steps, t0, device metrics)
+        try:
+            for _ in range(num_steps):
+                step, batch = next(pipe)
+                assert step == start + planner.executed + planner.dropped, \
+                    "pipeline out of lockstep with the SMD schedule"
+                if self._straggler_pending:
+                    # same contract as the per-step loop: the flag is
+                    # consumed by the NEXT step whatever it is — an SMD
+                    # drop absorbs it (one drop, not two); a kept step is
+                    # force-dropped (its prefetched batch is discarded)
+                    self._straggler_pending = False
+                    if batch is not None:
+                        planner.drop(step, batch)
+                        continue
+                chunk = planner.add(step, batch)
+                if chunk is not None:
+                    in_flight = self._dispatch(chunk, in_flight, log_every)
+            tail = planner.flush()
+            if tail is not None:
+                in_flight = self._dispatch(tail, in_flight, log_every)
+            if in_flight is not None:
+                self._finalize(in_flight, log_every)
+        finally:
+            pipe.close()
+            # keep telemetry consistent even if interrupted mid-run (the
+            # per-step loop updates these incrementally): an
+            # EnergyLedger.from_trainer after a KeyboardInterrupt must see
+            # the counts that produced self.history
+            self.executed_steps += planner.executed
+            self.dropped_steps += planner.dropped
+        trailing = planner.flush_trailing()
+        if trailing:
+            self.state = self.state._replace(step=self.state.step + trailing)
+        self._final_save()
+        return self.history
+
+    def _dispatch(self, chunk, in_flight, log_every):
+        """device_put + launch one chunk; sync the previous one after."""
+        steps, batches, incs = chunk
+        batches, incs = self._place(batches, incs)
+        with self._mesh_ctx():
+            t0 = time.perf_counter()
+            self.state, stacked = self._chunk_fn(self.state, batches, incs)
+        if in_flight is not None:
+            self._finalize(in_flight, log_every)
+        if self.ckpt_dir and self.ckpt_every and any(
+                (s + 1) % self.ckpt_every == 0 for s in steps):
+            # cadence at chunk granularity: the save waits for THIS chunk
+            # (np.asarray blocks) and lands on its boundary — its last
+            # executed step — which is what resume derives the
+            # chunk-aligned restart from (ft/checkpoint.resume_chunk_start)
+            self._save(steps[-1])
+        return steps, t0, stacked
+
+    def _place(self, batches, incs):
+        incs = jnp.asarray(incs)
+        if self.mesh is None:
+            return batches, incs
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed.sharding import batch_sharding
+        shardings = batch_sharding(self.mesh, batches, batch_axis=1)
+        batches = jax.device_put(batches, shardings)
+        incs = jax.device_put(incs, NamedSharding(self.mesh, P(None)))
+        return batches, incs
+
+    def _mesh_ctx(self):
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.distributed.sharding import activation_sharding
+        stack = contextlib.ExitStack()
+        stack.enter_context(activation_sharding(self.mesh))
+        stack.enter_context(self.mesh)
+        return stack
+
+    def _finalize(self, in_flight, log_every):
+        """Chunk boundary: ONE host sync for the whole chunk's stacked
+        metrics, then bookkeeping at chunk granularity."""
+        steps, t0, stacked = in_flight
+        host = jax.device_get(stacked)            # blocks until chunk done
+        sync_t = time.perf_counter()
+        # this chunk was dispatched (t0) while the PREVIOUS one was still
+        # running — clamp to the previous sync so overlapped time is not
+        # double-counted (else summed wall_s overstates wall clock ~2x and
+        # the straggler deadline trips on healthy chunks)
+        dt = sync_t - max(t0, self._last_sync_t)
+        self._last_sync_t = sync_t
+        per_step_s = dt / max(len(steps), 1)
+        for i, step in enumerate(steps):
+            metrics = {k: float(v[i]) for k, v in host.items()}
+            metrics["step"] = step
+            metrics["wall_s"] = per_step_s
+            self.history.append(metrics)
+            if log_every and step % log_every == 0:
+                print(f"step {step}: "
+                      f"loss={metrics.get('total_loss', 0):.4f} "
+                      f"({per_step_s*1e3:.0f} ms)")
+        if self.deadline_s and per_step_s > self.deadline_s:
+            self._straggler_pending = True
+
+    def _final_save(self):
+        if not self.ckpt_dir:
+            return
+        self._save(int(self.state.step) - 1)
+        # the final save must survive process exit: async writers are
+        # daemon threads, and an orphaned write leaves a stale .tmp
+        # (and no checkpoint) for the next --resume to trip over
+        from repro.ft.checkpoint import wait_for_saves
+        wait_for_saves()
+
+    # ------------------------------------------------------------------
+    # reporting
+    # ------------------------------------------------------------------
+
+    def steps_per_s(self) -> Optional[float]:
+        """Executed-step throughput over the run's measured wall time."""
+        wall = sum(h.get("wall_s", 0.0) for h in self.history)
+        if not self.history or wall <= 0:
+            return None
+        return len(self.history) / wall
 
     def measured_psg_fallback(self) -> Optional[float]:
         """Mean measured PSG fallback-tile ratio over executed steps — the

@@ -1,8 +1,11 @@
 """Data pipeline: determinism, shard disjointness, learnable structure."""
+import time
+
 import numpy as np
 import pytest
 
 from repro.core.config import SMDConfig
+from repro.core.smd import SMDIterator, smd_schedule
 from repro.data.pipeline import DataPipeline
 from repro.data.synthetic import (GaussianImageTask, MarkovLMTask,
                                   make_image_batch, make_lm_batch)
@@ -62,3 +65,68 @@ def test_pipeline_prefetch_and_smd():
     assert len(dropped) + len(kept) == 40
     assert len(dropped) > 5
     assert set(made).isdisjoint(set(dropped))  # dropped never generated
+
+
+def test_pipeline_close_joins_producer():
+    """Shutdown race (pinned): the producer can complete a ``put`` right
+    after close() drains the queue and go on generating; close() must
+    actually JOIN the thread, not just drain once."""
+    mk = lambda step, shard: {"x": np.full((2,), step)}
+    pipe = DataPipeline(mk, None, prefetch=1)
+    time.sleep(0.3)               # producer fills the queue and parks in put
+    assert pipe._thread.is_alive()
+    assert pipe.close() is True   # terminated within the timeout
+    assert not pipe._thread.is_alive()
+    with pytest.raises(StopIteration):
+        next(pipe)                # closed pipeline never blocks forever
+
+
+def test_pipeline_close_mid_consumption():
+    """close() while the consumer raced items off the queue still joins."""
+    mk = lambda step, shard: {"x": np.full((4,), step)}
+    pipe = DataPipeline(mk, None, prefetch=2)
+    for _ in range(5):
+        next(pipe)
+    assert pipe.close() is True
+    assert not pipe._thread.is_alive()
+
+
+def test_pipeline_resume_matches_schedule_tail():
+    """start_step > 0 reproduces the TAIL of smd_schedule exactly — same
+    drop positions and counts — which is what makes chunked resume land on
+    the same chunk layout as an uninterrupted run."""
+    cfg = SMDConfig(enabled=True, drop_prob=0.5)
+    seed, total, start = 7, 40, 17
+    sched = smd_schedule(cfg, seed, total)
+    mk = lambda step, shard: {"x": np.full((2,), step)}
+    pipe = DataPipeline(mk, cfg, seed=seed, start_step=start)
+    out = [next(pipe) for _ in range(total - start)]
+    pipe.close()
+    assert [s for s, _ in out] == list(range(start, total))
+    got_kept = [b is not None for _, b in out]
+    assert got_kept == [bool(k) for k in sched[start:]]
+    assert sum(1 for k in got_kept if not k) == int((~sched[start:]).sum())
+
+
+def test_smd_iterator_resume_matches_schedule_tail():
+    """SMDIterator at start_step > 0: same tail reproduction, and the
+    underlying iterator advances only on kept steps (zero-overhead drops).
+    The drop count over the window equals what Trainer.dropped_steps would
+    accumulate (both are counts of False entries in the same schedule)."""
+    cfg = SMDConfig(enabled=True, drop_prob=0.5)
+    seed, total, start = 3, 32, 9
+    sched = smd_schedule(cfg, seed, total)
+    consumed = []
+    def src():
+        i = 0
+        while True:
+            consumed.append(i)
+            yield {"i": i}
+            i += 1
+    it = SMDIterator(src(), cfg, seed, start_step=start)
+    out = [next(it) for _ in range(total - start)]
+    assert [s for s, _ in out] == list(range(start, total))
+    assert [b is not None for _, b in out] == [bool(k) for k in sched[start:]]
+    kept = int(sched[start:].sum())
+    assert len(consumed) == kept               # drops never touch the source
+    assert (total - start) - kept == int((~sched[start:]).sum())

@@ -10,7 +10,8 @@ import pytest
 from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
                                SMDConfig, TrainConfig)
 from repro.ft.checkpoint import (latest_step, restore_checkpoint,
-                                 save_checkpoint, wait_for_saves)
+                                 resume_chunk_start, save_checkpoint,
+                                 wait_for_saves)
 
 
 def _state():
@@ -38,6 +39,17 @@ def test_checkpoint_async_and_latest():
         assert latest_step(d) == 20
         out, step = restore_checkpoint(d, st)
         assert step == 20
+
+
+def test_resume_chunk_start():
+    """Chunk boundary derived from the saved step; empty dir reads as None
+    (fresh run), never step 0."""
+    st = _state()
+    with tempfile.TemporaryDirectory() as d:
+        assert resume_chunk_start(d) is None
+        save_checkpoint(d, st, 23)
+        assert resume_chunk_start(d) == 24
+        assert resume_chunk_start(d, step=7) == 8
 
 
 def test_checkpoint_shape_validation():

@@ -1,0 +1,269 @@
+"""Chunked compiled loop (DESIGN.md §Loop): parity with the per-step loop.
+
+The acceptance property this module pins: the chunked loop (K>1) matches
+the per-step reference loop **bit-for-bit** on the loss curve, the step
+counter, and the executed/dropped SMD counts — for both registered tasks,
+including a checkpoint/resume across a chunk boundary — and the energy
+report built from identical telemetry is unchanged.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnns import cnn_model
+from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
+                               PSGConfig, SLUConfig, SMDConfig, TrainConfig)
+from repro.data.synthetic import (GaussianImageTask, MarkovLMTask,
+                                  make_image_batch, make_lm_batch)
+from repro.training.loop import ChunkPlanner, make_chunk_step, stack_batches
+from repro.training.train_step import init_train_state
+from repro.training.trainer import Trainer
+
+
+def _exp(task_name, smd=True):
+    e2 = E2TrainConfig(smd=SMDConfig(enabled=smd, drop_prob=0.5),
+                       slu=SLUConfig(enabled=True, alpha=1e-3),
+                       psg=PSGConfig(enabled=True, swa=False))
+    tr = TrainConfig(global_batch=8, seq_len=16, lr=0.05, optimizer="psg",
+                     total_steps=64, schedule="constant")
+    if task_name == "cifar_cnn":
+        return Experiment(model=cnn_model("resnet14", 14, width=8), e2=e2,
+                          train=tr, task="cifar_cnn")
+    model = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                        num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=32,
+                        dtype="float32")
+    return Experiment(model=model, e2=e2, train=tr, task="lm")
+
+
+def _mk(exp):
+    if exp.task == "cifar_cnn":
+        task = GaussianImageTask(num_classes=10, snr=2.0)
+        return lambda s, sh: make_image_batch(task, 0, s, sh,
+                                              exp.train.global_batch)
+    task = MarkovLMTask(vocab=exp.model.vocab_size)
+    return lambda s, sh: make_lm_batch(task, 0, s, sh, exp.train.global_batch,
+                                       exp.train.seq_len)
+
+
+def _curve(hist):
+    return [(h["step"], h["total_loss"]) for h in hist]
+
+
+@pytest.mark.parametrize("task_name", ["lm", "cifar_cnn"])
+def test_chunked_matches_per_step_bitwise(task_name):
+    """K=4 chunks: loss curve, step counter, SMD counts and final params are
+    IDENTICAL to the per-step loop — drops ride as step_increments, so the
+    per-step RNG fold-in sees the same counters."""
+    steps = 20 if task_name == "cifar_cnn" else 24
+    exp = _exp(task_name)
+    mk = _mk(exp)
+    trA = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk)
+    hA = trA.run(steps)
+    trB = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk,
+                  chunk_steps=4)
+    hB = trB.run(steps)
+
+    assert _curve(hA) == _curve(hB)              # bit-for-bit, not allclose
+    assert int(trA.state.step) == int(trB.state.step) == steps
+    assert (trA.executed_steps, trA.dropped_steps) == \
+        (trB.executed_steps, trB.dropped_steps)
+    assert trA.dropped_steps > 0                 # SMD actually dropped
+    for a, b in zip(jax.tree.leaves(trA.state.params),
+                    jax.tree.leaves(trB.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # telemetry-derived accounting is unchanged for identical telemetry
+    repA = trA.energy_report(steps=steps).to_dict()
+    repB = trB.energy_report(steps=steps).to_dict()
+    assert repA == repB
+
+
+def test_chunked_resume_across_chunk_boundary():
+    """Straight chunked run == chunked run interrupted at a chunk-cadence
+    checkpoint and resumed (the save lands on a chunk boundary; resume
+    derives the restart from the saved step)."""
+    from repro.ft.checkpoint import (latest_step, restore_checkpoint,
+                                     resume_chunk_start)
+    exp = _exp("lm")
+    mk = _mk(exp)
+    steps, K = 24, 4
+
+    trA = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk,
+                  chunk_steps=K)
+    hA = trA.run(steps)
+
+    with tempfile.TemporaryDirectory() as d:
+        trB = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk,
+                      chunk_steps=K, checkpoint_dir=d, checkpoint_every=1)
+        trB.run(12)
+        saved = latest_step(d)
+        assert saved == 11                       # final save at window end
+        start = resume_chunk_start(d)
+        assert start == 12
+        restored, _ = restore_checkpoint(d, trB.state)
+        trC = Trainer(exp, jax.tree.map(jnp.asarray, restored), mk,
+                      chunk_steps=K)
+        assert int(trC.state.step) == start      # lands on the boundary
+        hC = trC.run(steps - start)
+
+    assert _curve(trB.history) + _curve(hC) == _curve(hA)
+    for a, b in zip(jax.tree.leaves(trA.state.params),
+                    jax.tree.leaves(trC.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert trB.dropped_steps + trC.dropped_steps == trA.dropped_steps
+
+
+def test_chunk_cadence_checkpoint_state_is_boundary_state():
+    """A cadence save inside a chunked run captures the state AT that
+    chunk's boundary, not a later in-flight state (regression: the save
+    must block on its own chunk, not trail the next dispatch)."""
+    from repro.ft.checkpoint import restore_checkpoint
+    exp = _exp("lm", smd=False)
+    mk = _mk(exp)
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk,
+                     chunk_steps=4, checkpoint_dir=d, checkpoint_every=4)
+        tr.run(12)
+        # step 3 closes the first chunk (steps 0..3): cadence 4 saved there
+        restored, step = restore_checkpoint(d, tr.state, step=3)
+        assert int(np.asarray(restored.step)) == 4
+        # resumed continuation reproduces the straight run
+        trC = Trainer(exp, jax.tree.map(jnp.asarray, restored), mk,
+                      chunk_steps=4)
+        hC = trC.run(8)
+        assert _curve(hC) == _curve(tr.history)[4:]
+
+
+def test_make_chunk_step_validates_shapes():
+    exp = _exp("lm", smd=False)
+    mk = _mk(exp)
+    state = init_train_state(jax.random.PRNGKey(0), exp)
+    batches = stack_batches([mk(t, 0) for t in range(3)])
+    fn = make_chunk_step(exp, K=4)
+    with pytest.raises(ValueError, match="K=4"):
+        fn(state, batches, jnp.ones((3,), jnp.int32))
+    fn3 = make_chunk_step(exp)
+    with pytest.raises(ValueError, match="leading axes"):
+        fn3(state, batches, jnp.ones((4,), jnp.int32))
+
+
+def test_chunk_planner_increments_and_trailing():
+    """Drops before an executed step fold into its increment; trailing
+    drops stay pending until flushed; straggler drop() accounts like SMD."""
+    p = ChunkPlanner(2)
+    assert p.add(0, None) is None                # drop
+    assert p.add(1, {"x": np.ones(2)}) is None   # exec, inc=2
+    p.drop(2, {"x": np.ones(2)})                 # straggler-dropped kept step
+    chunk = p.add(3, {"x": np.ones(2)})          # exec, inc=2 -> chunk full
+    steps, batches, incs = chunk
+    assert steps == (1, 3)
+    assert incs.tolist() == [2, 2]
+    assert batches["x"].shape == (2, 2)
+    assert p.add(4, None) is None
+    assert p.flush() is None                     # no buffered executed step
+    assert p.flush_trailing() == 1
+    assert (p.executed, p.dropped) == (2, 3)
+
+
+def test_chunked_straggler_drops_at_chunk_granularity():
+    """deadline_s below any chunk's per-step wall time: each finalized
+    chunk arms one drop; executed+dropped still covers the window and the
+    counter stays correct."""
+    exp = _exp("lm", smd=False)
+    mk = _mk(exp)
+    tr = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk,
+                 chunk_steps=4, deadline_s=1e-9)
+    tr.run(16)
+    assert tr.dropped_steps >= 1                 # straggler policy fired
+    assert tr.executed_steps + tr.dropped_steps == 16
+    assert int(tr.state.step) == 16
+    # dropped steps leave no history entries, like the per-step loop
+    assert len(tr.history) == tr.executed_steps
+
+
+def test_chunked_partial_tail_chunk():
+    """Window not divisible by K: the tail chunk is shorter, the counter
+    and history still line up with the per-step loop."""
+    exp = _exp("lm")
+    mk = _mk(exp)
+    trA = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk)
+    hA = trA.run(10)
+    trB = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk,
+                  chunk_steps=4)
+    hB = trB.run(10)
+    assert _curve(hA) == _curve(hB)
+    assert int(trB.state.step) == 10
+
+
+def test_mesh_single_device_chunked_parity():
+    """mesh=(1,1) routes through state/batch sharding + the chunked loop
+    and still reproduces the per-step curve bitwise."""
+    from repro.launch.mesh import make_mesh
+    exp = _exp("lm")
+    mk = _mk(exp)
+    trA = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk)
+    hA = trA.run(16)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    trB = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk,
+                  chunk_steps=4, mesh=mesh)
+    hB = trB.run(16)
+    assert _curve(hA) == _curve(hB)
+
+
+@pytest.mark.slow
+def test_mesh_two_device_data_parallel():
+    """2-way data-parallel chunked training (subprocess: the suite must
+    keep the default single-device runtime).  Loss curves match the
+    single-device per-step loop to reduction-order tolerance, and SMD
+    counts match exactly (host-side counter-based decisions)."""
+    script = r"""
+import dataclasses
+import sys
+sys.path.insert(0, "src")
+import jax, numpy as np
+assert jax.device_count() == 2, jax.devices()
+from tests.test_loop import _exp, _mk, _curve
+from repro.core.config import PSGConfig
+from repro.launch.mesh import make_mesh
+from repro.training.train_step import init_train_state
+from repro.training.trainer import Trainer
+
+# sgdm, PSG off: sign-based PSG updates can flip on cross-device
+# reduction-order differences, which is trajectory divergence by design —
+# the data-parallel parity claim is for the smooth optimizer path
+exp = _exp("lm")
+exp = exp.replace(
+    e2=dataclasses.replace(exp.e2, psg=PSGConfig(enabled=False)),
+    train=dataclasses.replace(exp.train, optimizer="sgdm"))
+mk = _mk(exp)
+trA = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk)
+hA = trA.run(16)
+mesh = make_mesh((2, 1), ("data", "model"))
+trB = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk,
+              chunk_steps=4, mesh=mesh)
+hB = trB.run(16)
+assert [s for s, _ in _curve(hA)] == [s for s, _ in _curve(hB)]
+np.testing.assert_allclose([l for _, l in _curve(hA)],
+                           [l for _, l in _curve(hB)], rtol=2e-3)
+assert (trA.executed_steps, trA.dropped_steps) == \
+    (trB.executed_steps, trB.dropped_steps)
+for leaf in jax.tree.leaves(trB.state.params):
+    assert leaf.sharding.mesh.shape["data"] == 2
+print("MESH2_OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = "src:" + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", script],
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))),
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MESH2_OK" in out.stdout

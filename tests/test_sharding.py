@@ -75,6 +75,45 @@ def test_batch_sharding_drops_batch_one():
     assert s2.spec == P("data", None)
 
 
+def test_batch_sharding_dict_batch_infers_rank_per_leaf():
+    """A dict batch resolves per leaf: rank-1 labels, rank-2 tokens, and
+    rank-4 NHWC CIFAR images all get the batch axis over data."""
+    import numpy as np
+    mesh = abstract_mesh((4, 2), ("data", "model"))
+    batch = {"image": np.zeros((8, 32, 32, 3)), "label": np.zeros((8,)),
+             "tokens": np.zeros((8, 128))}
+    sh = shd.batch_sharding(mesh, batch)
+    assert sh["image"].spec == P("data", None, None, None)
+    assert sh["label"].spec == P("data")
+    assert sh["tokens"].spec == P("data", None)
+
+
+def test_batch_sharding_chunk_stacked_batch_axis():
+    """Chunk-stacked batches (leading K scan axis): batch_axis=1 shards the
+    true batch dim and leaves the scan axis unsharded; a non-divisible
+    batch dim drops the sharding for that leaf only."""
+    import numpy as np
+    mesh = abstract_mesh((4, 2), ("data", "model"))
+    batch = {"image": np.zeros((6, 8, 32, 32, 3)), "label": np.zeros((6, 8)),
+             "odd": np.zeros((6, 3))}
+    sh = shd.batch_sharding(mesh, batch, batch_axis=1)
+    assert sh["image"].spec == P(None, "data", None, None, None)
+    assert sh["label"].spec == P(None, "data")
+    assert sh["odd"].spec == P(None, None)       # 3 % 4 != 0 -> replicated
+
+
+def test_batch_sharding_pod_data_and_seq_shard():
+    import numpy as np
+    mesh = abstract_mesh((2, 2, 2), ("pod", "data", "model"))
+    batch = {"tokens": np.zeros((8, 128)), "label": np.zeros((8,))}
+    sh = shd.batch_sharding(mesh, batch, seq_shard=True)
+    assert sh["tokens"].spec == P(("pod", "data"), "model")
+    assert sh["label"].spec == P(("pod", "data"))
+    # rank-0 / batch_axis beyond rank: fully replicated, never an error
+    s0 = shd.batch_sharding(mesh, {"scalar": np.zeros(())})
+    assert s0["scalar"].spec == P()
+
+
 def test_hint_noop_outside_context():
     import jax.numpy as jnp
     x = jnp.ones((4, 4))
