@@ -1,0 +1,230 @@
+"""Fused implicit-GEMM conv kernels vs the materialized im2col path.
+
+Two quantities per convolution site of the paper's CIFAR ResNet:
+
+* **HBM activation bytes moved** — the quantity of record (the same
+  precedent as bench_kernels' flash-attention ``hbm_ratio`` column): wall
+  time on the CPU Pallas interpreter is not TPU-representative, but the
+  operand lifecycle each path streams through HBM is a property of the
+  dispatch/BlockSpec structure and is computed exactly below;
+* **wall time** of a jitted forward+weight-grad on both paths (recorded
+  for the CPU trend only, clearly labeled as interpreter numbers).
+
+What the byte accounting counts (x-side activation traffic only — the
+output-gradient and output tensors move identically on both paths and are
+excluded from both sides):
+
+im2col path (``models/resnet.conv2d`` default, N = B*H'*W', din = k*k*C):
+  forward   reads the input once, then WRITES the (N, din) fp32 patch
+            tensor and reads it back for the GEMM;
+  backward  re-reads the saved patch tensor twice to build the MSB/full
+            quantization code grids, writes both int8 code copies, and the
+            kernel passes read the codes three times (predictor pass: msb;
+            gated pass: msb + full).
+
+fused path (``kernels/conv.py``, Xp = B*Hp*Wp*C padded-input elements):
+  forward   reads the padded input once per dout tile (n_j = ceil(dout /
+            BN)); no patch tensor exists;
+  backward  reads the padded input twice for code building, writes both
+            int8 code copies, and the two kernel passes read the codes
+            once per dout tile each (predictor: msb; gated: msb + full).
+
+For a 3x3 conv the patch tensor is a ~9x copy of the input, so the ratio
+lands around an order of magnitude; ``conv_json`` records the per-step
+totals over every conv site of the paper-shaped ResNet-74 batch-128
+config (``BENCH_conv.json``, uploaded by CI next to the other BENCH
+artifacts).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.kernels.conv import DEFAULT_BN
+
+FP32 = 4
+INT8 = 1
+
+
+def _geom(shape):
+    """Per-path operand extents of a conv site: (patch elems, kernel-operand
+    elems, full-input elems, pre-subsample elems or 0, dout tiles).
+
+    For ``k >= stride`` the kernel operand is the padded input.  For
+    ``k < stride`` (the 1x1 stride-2 projection shortcut) both paths
+    consume the ``[::s, ::s]`` subsample — ``core/psg.conv2d`` normalizes
+    to a stride-1 conv over it, and the materialized path's patch tensor
+    IS it — but BUILDING it still reads the full input once on either
+    path, so that read is charged separately (``sub_elems`` marks the
+    subsample-write the fused path additionally pays).
+    """
+    pad = shape.k // 2
+    full_elems = shape.batch * shape.hw * shape.hw * shape.cin
+    if shape.k < shape.stride:
+        xp_elems = shape.batch * shape.hw_out * shape.hw_out * shape.cin
+        sub_elems = xp_elems
+    else:
+        hw_in = shape.hw + 2 * pad
+        xp_elems = shape.batch * hw_in * hw_in * shape.cin
+        sub_elems = 0
+    patch_elems = (shape.batch * shape.hw_out * shape.hw_out *
+                   shape.k * shape.k * shape.cin)
+    n_j = -(-shape.cout // DEFAULT_BN)        # the kernel's dout tile count
+    return patch_elems, xp_elems, full_elems, sub_elems, n_j
+
+
+def im2col_activation_bytes(shape) -> int:
+    """x-side HBM traffic of one fwd+bwd on the materialized path."""
+    patch_elems, xp_elems, full_elems, sub_elems, _ = _geom(shape)
+    src_elems = full_elems if sub_elems else xp_elems     # what the builder reads
+    fwd = (src_elems * FP32                               # patch builder reads x
+           + 2 * patch_elems * FP32)                      # write+read patches
+    bwd = (2 * patch_elems * FP32                         # re-read for code build
+           + 2 * patch_elems * INT8                       # write msb+full codes
+           + 3 * patch_elems * INT8)                      # kernel passes read codes
+    return fwd + bwd
+
+
+def fused_activation_bytes(shape) -> int:
+    """x-side HBM traffic of one fwd+bwd on the implicit-GEMM path."""
+    _, xp_elems, full_elems, sub_elems, n_j = _geom(shape)
+    sub = (full_elems + sub_elems) * FP32 if sub_elems else 0  # build subsample
+    fwd = sub + n_j * xp_elems * FP32                     # operand, per dout tile
+    bwd = (2 * xp_elems * FP32                            # read for code build
+           + 2 * xp_elems * INT8                          # write msb+full codes
+           + 3 * n_j * xp_elems * INT8)                   # kernel passes read codes
+    return fwd + bwd
+
+
+def _shape_rows(fast: bool) -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import one_per_kind, time_us as _time
+    from repro.configs.paper_cnns import resnet_conv_shapes
+    from repro.core import psg
+    from repro.core.config import PSGConfig
+    from repro.kernels.ref import conv_patches_ref
+
+    cfg = PSGConfig(enabled=True)
+    cfg_fused = PSGConfig(enabled=True, fused_conv=True)
+    batch = 2 if fast else 8
+    convs = resnet_conv_shapes(depth=74, width=16, batch=batch)
+    if fast:                                  # one shape of each kind
+        convs = one_per_kind(convs)
+
+    rows = []
+    for c in convs:
+        k, s = c.k, c.stride
+        key = jax.random.PRNGKey(c.hw + c.cin + c.cout + k + s)
+        x = jax.random.normal(key, (c.batch, c.hw, c.hw, c.cin)) * 0.5
+        w = jax.random.normal(jax.random.PRNGKey(1),
+                              (k * k * c.cin, c.cout)) * 0.1
+        gy = jax.random.normal(jax.random.PRNGKey(2),
+                               (c.batch, c.hw_out, c.hw_out, c.cout)) * 0.01
+
+        def im2col_loss(w_, x_):
+            with psg.enable(cfg):
+                pad = k // 2
+                xp = jnp.pad(x_, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+                p2 = conv_patches_ref(xp, k, s)
+                y = psg.psg_matmul(p2, w_, cfg)
+            return jnp.sum(y.reshape(gy.shape) * gy)
+
+        def fused_loss(w_, x_):
+            with psg.enable(cfg_fused):
+                y = psg.conv2d(x_, w_, k=k, stride=s)
+            return jnp.sum(y * gy)
+
+        us_im2col, _ = _time(jax.jit(jax.grad(im2col_loss)), w, x)
+        us_fused, _ = _time(jax.jit(jax.grad(fused_loss)), w, x)
+        b_im2col = im2col_activation_bytes(c)
+        b_fused = fused_activation_bytes(c)
+        rows.append({
+            "batch": c.batch, "hw": c.hw, "cin": c.cin, "cout": c.cout,
+            "k": k, "stride": s, "kind": c.kind,
+            "us_im2col_cpu_interpret": us_im2col,
+            "us_fused_cpu_interpret": us_fused,
+            "im2col_activation_bytes": b_im2col,
+            "fused_activation_bytes": b_fused,
+            "bytes_ratio": b_im2col / b_fused,
+        })
+    return rows
+
+
+def _paper_totals(depth: int = 74, width: int = 16, batch: int = 128) -> Dict:
+    """Per-training-step activation-byte totals over EVERY conv site (with
+    multiplicity) of the paper-shaped config — the acceptance quantity."""
+    from repro.configs.paper_cnns import resnet_conv_shapes
+    sites = resnet_conv_shapes(depth=depth, width=width, batch=batch,
+                               unique=False)
+    b_im2col = sum(im2col_activation_bytes(c) for c in sites)
+    b_fused = sum(fused_activation_bytes(c) for c in sites)
+    return {"depth": depth, "width": width, "batch": batch,
+            "conv_sites": len(sites),
+            "im2col_activation_bytes_per_step": b_im2col,
+            "fused_activation_bytes_per_step": b_fused,
+            "bytes_ratio": b_im2col / b_fused}
+
+
+def _train_proxy(fast: bool) -> Dict:
+    """Measured steps/s of a short CPU training A/B with fused_conv
+    on/off.  The Pallas interpreter executes the fused kernels here, so
+    this is a loop-plumbing check, NOT a hardware speed claim — the byte
+    totals above are the quantity of record (module docstring)."""
+    import jax
+
+    from repro.configs.paper_cnns import cnn_model
+    from repro.core.config import (E2TrainConfig, Experiment, PSGConfig,
+                                   TrainConfig)
+    from repro.data.synthetic import GaussianImageTask, make_image_batch
+    from repro.training.train_step import init_train_state
+    from repro.training.trainer import Trainer
+
+    depth, width, batch, steps = (8, 8, 4, 2) if fast else (14, 16, 8, 4)
+    task = GaussianImageTask(num_classes=10, snr=2.0)
+    mk = lambda s, sh: make_image_batch(task, 0, s, sh, batch)
+    out: Dict = {"depth": depth, "width": width, "batch": batch,
+                 "steps": steps,
+                 "note": "CPU Pallas-interpreter proxy; bytes_ratio is the "
+                         "quantity of record"}
+    for label, fused in (("im2col", False), ("fused", True)):
+        exp = Experiment(
+            model=cnn_model(f"resnet{depth}", depth, width=width),
+            e2=E2TrainConfig(psg=PSGConfig(enabled=True, swa=False,
+                                           fused_conv=fused)),
+            train=TrainConfig(global_batch=batch, lr=0.03, optimizer="psg",
+                              total_steps=1000, schedule="constant"),
+            task="cifar_cnn")
+        tr = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk)
+        tr.run(1)                                     # compile
+        t0 = time.perf_counter()
+        tr.run(steps)
+        out[f"{label}_steps_per_s"] = steps / (time.perf_counter() - t0)
+    out["speedup_cpu_interpret"] = (out["fused_steps_per_s"] /
+                                    out["im2col_steps_per_s"])
+    return out
+
+
+def conv_json(fast: bool = True) -> dict:
+    """The BENCH_conv.json record (CI artifact)."""
+    return {"paper_resnet74_batch128": _paper_totals(),
+            "shapes": _shape_rows(fast),
+            "train_proxy_cpu_interpret": _train_proxy(fast)}
+
+
+def run(fast: bool = True):
+    """CSV rows for benchmarks/run.py."""
+    from benchmarks.common import csv_row
+    totals = _paper_totals()
+    yield csv_row("conv/paper_resnet74_batch128", 0.0,
+                  f"bytes_ratio={totals['bytes_ratio']:.2f};"
+                  f"im2col_GB={totals['im2col_activation_bytes_per_step']/1e9:.2f};"
+                  f"fused_GB={totals['fused_activation_bytes_per_step']/1e9:.2f}")
+    for r in _shape_rows(fast):
+        yield csv_row(
+            f"conv/{r['kind']}/{r['batch']}x{r['hw']}x{r['cin']}-"
+            f"{r['cout']}k{r['k']}s{r['stride']}",
+            r["us_fused_cpu_interpret"],
+            f"im2col_us={r['us_im2col_cpu_interpret']:.1f};"
+            f"bytes_ratio={r['bytes_ratio']:.2f}")

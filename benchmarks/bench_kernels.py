@@ -8,30 +8,18 @@ paper-faithful training — and report the measured fallback-tile ratio per
 shape (the input to ``core/energy.measured_psg_factor``)."""
 from __future__ import annotations
 
-import time
 from typing import List
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.paper_cnns import resnet_im2col_shapes
+from repro.configs.paper_cnns import resnet_conv_shapes
 from repro.core.config import PSGConfig
 from repro.core.energy import FP32_MAC_PJ, mac_energy_pj
 from repro.kernels import dispatch
 from repro.kernels.ref import psg_grad_w_ref
 
-from benchmarks.common import csv_row
-
-
-def _time(fn, *args, reps=3):
-    """(us_per_call, last_result) — the result is returned so callers don't
-    re-execute the (interpret-mode, expensive) kernel just to read it."""
-    out = fn(*args)  # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6, out
+from benchmarks.common import csv_row, one_per_kind, time_us as _time
 
 
 def run(fast: bool = True) -> List[str]:
@@ -50,11 +38,20 @@ def run(fast: bool = True) -> List[str]:
     rows.append(csv_row("kernel/quantize", us_q, "bits=8"))
 
     # oracle vs tile kernel on ResNet-74 im2col geometry (batch reduced for
-    # the CPU interpreter; din/dout/k-structure are the paper's)
+    # the CPU interpreter; din/dout/k/stride-structure are the paper's).
+    # Fast mode sweeps one shape of each KIND — 3x3 body, 3x3 stride-2
+    # transition, 1x1 stride-2 downsample — instead of the first three body
+    # shapes, so the non-uniform geometries are always on record.
     batch = 2 if fast else 16
-    shapes = resnet_im2col_shapes(depth=74, width=16, batch=batch)
-    shapes = shapes[:3] if fast else shapes
-    for (Ns, din, dout) in shapes:
+    convs = resnet_conv_shapes(depth=74, width=16, batch=batch)
+    if fast:
+        convs = one_per_kind(convs)
+    seen = set()
+    for c in convs:
+        Ns, din, dout = c.im2col
+        if (Ns, din, dout) in seen:
+            continue
+        seen.add((Ns, din, dout))
         kk1, kk2 = jax.random.split(jax.random.PRNGKey(Ns + din))
         xs = jax.random.normal(kk1, (Ns, din))
         gs = jax.random.normal(kk2, (Ns, dout)) * 0.01
@@ -62,8 +59,9 @@ def run(fast: bool = True) -> List[str]:
             lambda a, b: dispatch.psg_grad_w(a, b, cfg), xs, gs)
         us_ref, _ = _time(lambda a, b: psg_grad_w_ref(a, b, cfg), xs, gs)
         rows.append(csv_row(
-            f"kernel/psg_resnet74_im2col/{Ns}x{din}x{dout}", us_tile,
-            f"ref_us={us_ref:.1f};fallback_tile_ratio={float(fb):.3f}"))
+            f"kernel/psg_resnet74_im2col/{c.kind}/{Ns}x{din}x{dout}", us_tile,
+            f"ref_us={us_ref:.1f};k={c.k};stride={c.stride};"
+            f"fallback_tile_ratio={float(fb):.3f}"))
 
     # flash attention vs unfused oracle (interpret mode; derived column
     # reports the HBM-traffic ratio O(S*d)/O(S*T) that matters on TPU)

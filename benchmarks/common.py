@@ -72,6 +72,28 @@ def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
 
 
+def time_us(fn, *args, reps: int = 3):
+    """(us_per_call, last_result) — the result is returned so callers don't
+    re-execute the (interpret-mode, expensive) kernel just to read it.
+    The first call compiles and is excluded from the timing."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def one_per_kind(shapes):
+    """First ConvShape of each ``kind`` — the fast-mode sweep subset that
+    still covers body / stride-2 transition / 1x1 downsample geometry."""
+    by_kind = {}
+    for s in shapes:
+        by_kind.setdefault(s.kind, s)
+    return list(by_kind.values())
+
+
 def energy_fields(trainer: Trainer, steps: Optional[int] = None) -> str:
     """Derived-CSV fragment from the run's EnergyReport — the single path
     every bench reports energy through (DESIGN.md §Energy).

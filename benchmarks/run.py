@@ -11,7 +11,13 @@ diff the numbers PR over PR.
 ``--json-throughput [PATH]`` (default ``BENCH_throughput.json``) records
 the loop-throughput trajectory: executed steps/s of the per-step vs
 chunked loop and the chunk speedup on the depth-14 ResNet CPU configs
-(benchmarks/bench_throughput.py).  CI uploads both BENCH JSONs.
+(benchmarks/bench_throughput.py).
+
+``--json-conv [PATH]`` (default ``BENCH_conv.json``) records the
+fused-conv trajectory: implicit-GEMM vs materialized-im2col activation
+bytes moved per training step on the paper-shaped ResNet-74 config plus
+per-shape rows and a CPU proxy steps/s A/B (benchmarks/bench_conv.py).
+CI uploads all three BENCH JSONs.
 """
 from __future__ import annotations
 
@@ -82,10 +88,15 @@ def main(argv=None) -> None:
                     help="write the chunked-loop throughput record "
                          "(steps/s per-step vs chunked + speedup) to PATH "
                          "and exit (skips the CSV benches)")
+    ap.add_argument("--json-conv", nargs="?", const="BENCH_conv.json",
+                    default=None, metavar="PATH",
+                    help="write the fused-conv record (implicit-GEMM vs "
+                         "im2col: activation bytes moved + CPU proxy "
+                         "steps/s) to PATH and exit (skips the CSV benches)")
     args = ap.parse_args(argv)
     fast = not args.full
 
-    if args.json or args.json_throughput:    # not exclusive: write both
+    if args.json or args.json_throughput or args.json_conv:  # write all given
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(energy_json(fast=fast), f, indent=2)
@@ -95,11 +106,16 @@ def main(argv=None) -> None:
             with open(args.json_throughput, "w") as f:
                 json.dump(throughput_json(fast=fast), f, indent=2)
             print(f"wrote {args.json_throughput}", file=sys.stderr)
+        if args.json_conv:
+            from benchmarks.bench_conv import conv_json
+            with open(args.json_conv, "w") as f:
+                json.dump(conv_json(fast=fast), f, indent=2)
+            print(f"wrote {args.json_conv}", file=sys.stderr)
         return
 
-    from benchmarks import (bench_cnn, bench_convergence, bench_e2train,
-                            bench_kernels, bench_psg, bench_slu, bench_smd,
-                            bench_throughput, roofline)
+    from benchmarks import (bench_cnn, bench_conv, bench_convergence,
+                            bench_e2train, bench_kernels, bench_psg,
+                            bench_slu, bench_smd, bench_throughput, roofline)
 
     benches = {
         "smd": bench_smd.run,           # Fig. 3a/3b, Tab. 1
@@ -109,6 +125,7 @@ def main(argv=None) -> None:
         "cnn": bench_cnn.run,           # Tab. 4 (paper backbones)
         "convergence": bench_convergence.run,  # Fig. 5
         "kernels": bench_kernels.run,
+        "conv": bench_conv.run,         # §Kernels (implicit-GEMM vs im2col)
         "throughput": bench_throughput.run,  # §Loop (chunked vs per-step)
         "roofline": roofline.run,       # §Roofline (from dry-run artifact)
     }

@@ -69,6 +69,10 @@ def main():
     ap.add_argument("--mesh", type=int, default=0, metavar="N",
                     help="N-way data-parallel mesh over the batch axis "
                          "(0 = single device)")
+    ap.add_argument("--fused-conv", action="store_true",
+                    help="route CNN convs through the fused implicit-GEMM "
+                         "kernels (kernels/conv.py) instead of materialized "
+                         "im2col (cifar_cnn task; DESIGN.md §Kernels)")
     args = ap.parse_args()
     if args.mesh > 1 and jax.device_count() < args.mesh:
         raise SystemExit(
@@ -81,7 +85,8 @@ def main():
 
     e2 = E2TrainConfig(smd=SMDConfig(enabled=True, drop_prob=0.5),
                        slu=SLUConfig(enabled=True, alpha=1e-3),
-                       psg=PSGConfig(enabled=True))
+                       psg=PSGConfig(enabled=True,
+                                     fused_conv=args.fused_conv))
     tcfg = TrainConfig(global_batch=args.batch, seq_len=args.seq,
                        lr=0.03, optimizer="psg", total_steps=args.steps,
                        schedule="step", microbatches=1)

@@ -5,7 +5,7 @@ These are full :class:`Experiment` bundles with ``task="cifar_cnn"``; they
 run through the same ``init_train_state`` / ``make_train_step`` / ``Trainer``
 stack as every LM experiment (SMD, SLU, PSG probe, SWA, checkpointing).
 """
-from typing import List, Optional, Tuple
+from typing import List, NamedTuple, Optional, Tuple
 
 from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
                                TrainConfig)
@@ -50,33 +50,96 @@ def mobilenetv2(num_classes: int = 10,
                       task="cifar_cnn")
 
 
-def resnet_im2col_shapes(depth: int = 74, width: int = 16, batch: int = 128,
-                         image: int = 32) -> List[Tuple[int, int, int]]:
-    """Distinct (N, din, dout) im2col matmul shapes of a CIFAR ResNet.
+class ConvShape(NamedTuple):
+    """One convolution site of a CIFAR backbone, full geometry.
 
-    These are exactly the operand shapes ``models/resnet.conv2d`` hands to
-    ``psg.matmul`` — i.e. the shapes the PSG backward tile kernel sees
-    during paper-faithful training (N = B*H'*W', din = k*k*Cin, dout =
-    Cout).  Used by benchmarks/bench_kernels.py to compare the element-level
-    oracle against the tile kernel on real workload geometry.
+    ``hw`` is the *input* spatial extent; SAME padding ``k // 2`` is
+    implied (the ``models/resnet.conv2d`` convention), so the output
+    extent is ``ceil(hw / stride)``.
+    """
+
+    batch: int
+    hw: int
+    cin: int
+    cout: int
+    k: int
+    stride: int
+
+    @property
+    def hw_out(self) -> int:
+        return -(-self.hw // self.stride)
+
+    @property
+    def kind(self) -> str:
+        """"body" (3x3 stride-1), "strided" (3x3 stride-2 transition),
+        "down" (1x1 projection shortcut, stride 2), "point" (1x1)."""
+        if self.k == 1:
+            return "down" if self.stride > 1 else "point"
+        return "strided" if self.stride > 1 else "body"
+
+    @property
+    def im2col(self) -> Tuple[int, int, int]:
+        """The (N, din, dout) matmul this conv materializes on the
+        im2col path: N = B*H'*W', din = k*k*Cin, dout = Cout."""
+        return (self.batch * self.hw_out * self.hw_out,
+                self.k * self.k * self.cin, self.cout)
+
+
+def resnet_conv_shapes(depth: int = 74, width: int = 16, batch: int = 128,
+                       image: int = 32, unique: bool = True
+                       ) -> List[ConvShape]:
+    """Convolution geometries of a CIFAR ResNet, in network order:
+    stem, then per stage the transition conv1 (stride-2 from stage 1 on),
+    conv2, the 1x1 stride-2 projection shortcut, and the body convs.
+
+    This is the full geometry (k, stride included) behind
+    :func:`resnet_im2col_shapes`; the conv kernel benches/tests sweep it
+    directly so the stride-2 transitions and 1x1 downsamples are exercised
+    as *convolutions*, not just as their flattened matmuls.  With
+    ``unique=False`` every conv site is returned (with multiplicity) — the
+    per-step traffic/energy totals need the repeat counts.
     """
     n = (depth - 2) // 6
-    shapes: List[Tuple[int, int, int]] = [(batch * image * image, 9 * 3, width)]
+    shapes: List[ConvShape] = [ConvShape(batch, image, 3, width, 3, 1)]
     H, cin = image, width
     for stage, cout in enumerate((width, 2 * width, 4 * width)):
         for b in range(n):
             stride = 2 if (stage > 0 and b == 0) else 1
+            shapes.append(ConvShape(batch, H, cin if b == 0 else cout,
+                                    cout, 3, stride))
             H = H // stride
-            shapes.append((batch * H * H, 9 * (cin if b == 0 else cout), cout))
-            shapes.append((batch * H * H, 9 * cout, cout))
+            shapes.append(ConvShape(batch, H, cout, cout, 3, 1))
             if b == 0 and cin != cout:
-                # 1x1 projection shortcut (models/resnet.py stage "trans"):
-                # im2col din is just cin for k=1
-                shapes.append((batch * H * H, cin, cout))
+                # 1x1 stride-2 projection shortcut (stage "trans" `down`)
+                shapes.append(ConvShape(batch, H * stride, cin, cout, 1,
+                                        stride))
             cin = cout
+    if not unique:
+        return shapes
     seen, uniq = set(), []
     for s in shapes:
         if s not in seen:
             seen.add(s)
             uniq.append(s)
+    return uniq
+
+
+def resnet_im2col_shapes(depth: int = 74, width: int = 16, batch: int = 128,
+                         image: int = 32) -> List[Tuple[int, int, int]]:
+    """Distinct (N, din, dout) im2col matmul shapes of a CIFAR ResNet.
+
+    These are exactly the operand shapes ``models/resnet.conv2d`` hands to
+    ``psg.matmul`` on the materialized path — i.e. the shapes the PSG
+    backward tile kernel sees during paper-faithful training (N = B*H'*W',
+    din = k*k*Cin, dout = Cout), including the stride-2 transitions and
+    the 1x1 projection shortcuts.  Derived from
+    :func:`resnet_conv_shapes`; used by benchmarks/bench_kernels.py to
+    compare the element-level oracle against the tile kernel on real
+    workload geometry.
+    """
+    seen, uniq = set(), []
+    for s in resnet_conv_shapes(depth, width, batch, image):
+        if s.im2col not in seen:
+            seen.add(s.im2col)
+            uniq.append(s.im2col)
     return uniq

@@ -251,6 +251,13 @@ class PSGConfig:
     # FSDP all-gather of the weight on int8 codes instead of bf16 (replaces
     # the retired REPRO_PSG_INT8_GATHER trace-time env read).
     int8_gather: bool = False
+    # Route CNN convolutions through the fused implicit-GEMM Pallas kernels
+    # (kernels/conv.py): the k x k patch gather happens inside the kernel
+    # instead of materializing the im2col operand in HBM (DESIGN.md
+    # §Kernels).  Default off: the im2col + psg.matmul path stays the
+    # reference; flip per-experiment (the frozen config is a static jit
+    # argument, so the selection is jit-cache-correct).
+    fused_conv: bool = False
 
 
 @dataclass(frozen=True)

@@ -155,6 +155,101 @@ def psg_matmul(x2: jnp.ndarray, w: jnp.ndarray, cfg: PSGConfig) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# fused implicit-GEMM convolution (PSGConfig.fused_conv)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _psg_conv2d(xp: jnp.ndarray, w: jnp.ndarray, probe: jnp.ndarray,
+                k: int, stride: int, cfg: PSGConfig) -> jnp.ndarray:
+    """NHWC conv ``(B, Hp, Wp, C) x (k*k*C, dout)`` with PSG semantics,
+    without materializing the im2col operand.
+
+    ``xp`` is pre-padded (padding lives OUTSIDE the custom_vjp so autodiff
+    crops ``dx`` for free).  Forward quantizes both operands onto the
+    ``bits_x`` grid — element-wise on the padded input, which is the same
+    grid the im2col path puts on the patch tensor (gathering commutes with
+    the per-tensor code map; the ``k < stride`` case where it would not is
+    normalized away in :func:`conv2d`) — and runs the implicit-GEMM kernel
+    through the dispatch layer.  ``probe`` is the shared fallback-stats
+    carrier (module docstring).
+    """
+    xq = quantize(xp, cfg.bits_x)
+    if cfg.int8_gather:
+        from repro.distributed.sharding import replicate
+        codes, s = quantize_int(w, cfg.bits_x)
+        codes = replicate(codes)              # int8 on the wire
+        wq = codes.astype(xq.dtype) * s.astype(xq.dtype)
+    else:
+        wq = quantize(w, cfg.bits_x).astype(xq.dtype)
+    return dispatch.conv_fwd(xq, wq, cfg, k=k, stride=stride)
+
+
+def _psg_conv2d_fwd(xp, w, probe, k, stride, cfg):
+    return _psg_conv2d(xp, w, probe, k, stride, cfg), (xp, w)
+
+
+def _psg_conv2d_bwd(k, stride, cfg, res, gy):
+    xp, w = res
+    B, Hp, Wp, C = xp.shape
+    dout = w.shape[-1]
+    ho, wo = gy.shape[1], gy.shape[2]
+    gq = quantize(gy, cfg.bits_g)
+    wq = quantize(w, cfg.bits_x)
+    # input gradient: per-tap col2im scatter-add — each tap's (B*Ho*Wo, C)
+    # contribution is computed and scattered directly; the full (N, k*k*C)
+    # dpatches tensor of the im2col backward is never formed.
+    from repro.kernels.conv import to_tap_major
+    wt = to_tap_major(wq, k, C).astype(gq.dtype)
+    g2 = gq.reshape(-1, dout)
+    dxp = jnp.zeros(xp.shape, gq.dtype)
+    for t in range(k * k):
+        ki, kj = t // k, t % k
+        g_t = (g2 @ wt[t * C:(t + 1) * C, :].T).reshape(B, ho, wo, C)
+        dxp = dxp.at[:, ki:ki + (ho - 1) * stride + 1:stride,
+                     kj:kj + (wo - 1) * stride + 1:stride, :].add(g_t)
+    # weight gradient: tile-level Eq. (2) with the patch gather inside the
+    # kernel's reduction loop (dispatch: Pallas interpret on CPU, Mosaic on
+    # TPU, element-level oracle when pinned to the reference backend).
+    sign, fallback = dispatch.conv_grad_w(xp, gy, cfg, k=k, stride=stride)
+    dw = sign.astype(w.dtype)
+    macs = jnp.float32(B * ho * wo) * (k * k * C) * dout
+    dprobe = jnp.stack([fallback * macs, macs])
+    return dxp.astype(xp.dtype), dw, dprobe
+
+
+_psg_conv2d.defvjp(_psg_conv2d_fwd, _psg_conv2d_bwd)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, k: int = 3,
+           stride: int = 1) -> jnp.ndarray:
+    """Fused-conv entry point: NHWC ``x`` with a patch-major ``(k*k*C,
+    dout)`` weight, SAME padding ``k // 2`` (the models' convention).
+
+    With an active PSG config this routes forward AND weight-gradient
+    through the implicit-GEMM kernels; with none it falls back to the
+    materialized im2col + plain matmul (correctness anchor — model code
+    only selects this path when ``cfg.fused_conv`` is set anyway).
+
+    The ``k < stride`` case (1x1 stride-2 projection shortcut) is
+    normalized to a pre-subsampled stride-1 conv first: its im2col patch
+    tensor IS the subsample, so quantizing after subsampling keeps the
+    quantization grid — and therefore the PSG signs — identical to the
+    im2col path's.
+    """
+    cfg = active_config()
+    if k < stride:
+        x = x[:, ::stride, ::stride, :]
+        stride = 1
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0))) if pad else x
+    if cfg is None:
+        from repro.kernels.ref import conv_fwd_ref
+        return conv_fwd_ref(xp, w, k, stride)
+    return _psg_conv2d(xp, w, _current_probe(), k, stride, cfg)
+
+
+# ---------------------------------------------------------------------------
 # trace-time dispatch: layers call psg.einsum / psg.matmul
 # ---------------------------------------------------------------------------
 

@@ -146,3 +146,41 @@ def quantize(x: jnp.ndarray, bits: int,
     if backend == BACKEND_REFERENCE:
         return ref.quantize_ref(x, bits)
     return ops.quantize(x, bits, interpret=backend != BACKEND_MOSAIC)
+
+
+def conv_fwd(xq: jnp.ndarray, wq: jnp.ndarray, cfg: Optional[PSGConfig],
+             *, k: int, stride: int) -> jnp.ndarray:
+    """Conv forward on pre-quantized operands (pre-padded NHWC input,
+    patch-major weight).
+
+    Implicit-GEMM Pallas kernel (``kernels/conv.py``) on the
+    interpret/mosaic backends — the im2col operand is gathered inside the
+    kernel, never materialized in HBM; materialized im2col + single GEMM
+    on the reference backend (the semantics anchor, value-equal up to fp32
+    tap-summation order).
+    """
+    backend = resolve_backend(cfg)
+    if backend == BACKEND_REFERENCE:
+        return ref.conv_fwd_ref(xq, wq, k, stride)
+    return ops.conv_fwd(xq, wq, k, stride,
+                        interpret=backend != BACKEND_MOSAIC)
+
+
+def conv_grad_w(xp: jnp.ndarray, gy: jnp.ndarray, cfg: PSGConfig,
+                *, k: int, stride: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """PSG conv weight-gradient sign + measured fallback ratio.
+
+    Same contract as :func:`psg_grad_w` with the im2col operand implicit:
+    tile-level kernel on interpret/mosaic (fallback ratio = fraction of
+    ``(C, BN)``-per-tap output tiles that ran the full product); element
+    level on the reference backend.  Both feed the same probe channel
+    (``core/psg.py``) and the same energy model.
+    """
+    backend = resolve_backend(cfg)
+    xf = xp.astype(jnp.float32)
+    gf = gy.astype(jnp.float32)
+    if backend == BACKEND_REFERENCE:
+        return (ref.conv_grad_w_ref(xf, gf, cfg, k, stride),
+                ref.conv_fallback_ratio_ref(xf, gf, cfg, k, stride))
+    return ops.conv_grad_w(xf, gf, cfg, k, stride,
+                           interpret=backend != BACKEND_MOSAIC)

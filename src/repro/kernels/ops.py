@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.config import PSGConfig
 from repro.core.quant import qscale
+from repro.kernels import conv as _cv
 from repro.kernels import psg_matmul as _pm
 from repro.kernels import quant as _q
 
@@ -68,3 +69,46 @@ def psg_grad_w(x2: jnp.ndarray, gy2: jnp.ndarray, cfg: PSGConfig,
 def quantize(x: jnp.ndarray, bits: int, interpret: bool = True
              ) -> jnp.ndarray:
     return _q.quantize_pallas(x, bits, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("k", "stride", "interpret"))
+def conv_fwd(xq: jnp.ndarray, wq: jnp.ndarray, k: int, stride: int,
+             interpret: bool = True) -> jnp.ndarray:
+    """Implicit-GEMM conv forward on pre-quantized operands.
+
+    ``xq``: pre-padded NHWC ``(B, Hp, Wp, C)``; ``wq``: patch-major
+    ``(k*k*C, dout)``.  Value-equal to the materialized
+    ``kernels/ref.conv_fwd_ref`` up to fp32 tap-summation order — the
+    patch tensor is never written to HBM.
+    """
+    return _cv.conv_fwd_pallas(xq, wq, k=k, stride=stride,
+                               interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "stride", "interpret"))
+def conv_grad_w(xp: jnp.ndarray, gy: jnp.ndarray, cfg: PSGConfig,
+                k: int, stride: int, interpret: bool = True
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Tile-level PSG conv weight gradient, implicit im2col gather.
+
+    ``xp``: pre-padded NHWC input (raw values; codes are built here the
+    same way :func:`psg_grad_w` builds them — element-wise on the padded
+    input, which carries the identical quantization grid as the patch
+    tensor since gathering commutes with the per-tensor code map).
+    Returns ``(sign (k*k*C, dout) float32 patch-major, fallback_tile_ratio
+    scalar)`` — the same contract as :func:`psg_grad_w` on the
+    materialized operand.
+    """
+    xm_c, _ = _codes(xp, cfg.bits_x_msb)
+    gm_c, _ = _codes(gy, cfg.bits_g_msb)
+    xq_c, _ = _codes(xp, cfg.bits_x)
+    gq_c, _ = _codes(gy, cfg.bits_g)
+    # pass 1: predictor product for the adaptive threshold (code units —
+    # sign(g) is scale-invariant, exactly as in psg_grad_w above)
+    g_msb = _cv.conv_grad_w_predictor_pallas(xm_c, gm_c, k=k, stride=stride,
+                                             interpret=interpret)
+    tau_codes = cfg.beta * jnp.max(jnp.abs(g_msb))
+    sign_i8, stats = _cv.conv_grad_w_pallas(
+        xm_c, gm_c, xq_c, gq_c, tau_codes, k=k, stride=stride,
+        interpret=interpret)
+    return sign_i8.astype(jnp.float32), jnp.mean(stats.astype(jnp.float32))

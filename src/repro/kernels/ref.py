@@ -63,6 +63,46 @@ def psg_fallback_ratio_ref(x2: jnp.ndarray, gy2: jnp.ndarray, cfg: PSGConfig
     return jnp.mean(jnp.logical_not(pred_ok).astype(jnp.float32))
 
 
+# ---------------------------------------------------------------------------
+# conv oracles: materialized im2col — what the implicit-GEMM kernels
+# (kernels/conv.py) eliminate and are held accountable to
+# ---------------------------------------------------------------------------
+
+
+def conv_patches_ref(xp: jnp.ndarray, k: int, stride: int) -> jnp.ndarray:
+    """Materialized im2col of a pre-padded NHWC input: ``(B*Ho*Wo, k*k*C)``
+    in the patch-major (channel-major) layout the model weights use."""
+    p = jax.lax.conv_general_dilated_patches(
+        xp, (k, k), (stride, stride), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return p.reshape(-1, p.shape[-1])
+
+
+def conv_fwd_ref(xp: jnp.ndarray, w: jnp.ndarray, k: int, stride: int
+                 ) -> jnp.ndarray:
+    """im2col + single-GEMM conv forward (the materialized reference)."""
+    B, Hp, Wp, _ = xp.shape
+    ho = (Hp - k) // stride + 1
+    wo = (Wp - k) // stride + 1
+    y = conv_patches_ref(xp, k, stride) @ w.astype(xp.dtype)
+    return y.reshape(B, ho, wo, -1)
+
+
+def conv_grad_w_ref(xp: jnp.ndarray, gy: jnp.ndarray, cfg: PSGConfig,
+                    k: int, stride: int) -> jnp.ndarray:
+    """Element-level PSG conv weight gradient: materialize the im2col
+    operand, then apply the Eq. (2) oracle — ``(k*k*C, dout)`` signs."""
+    p2 = conv_patches_ref(xp, k, stride)
+    return psg_grad_w_ref(p2, gy.reshape(-1, gy.shape[-1]), cfg)
+
+
+def conv_fallback_ratio_ref(xp: jnp.ndarray, gy: jnp.ndarray, cfg: PSGConfig,
+                            k: int, stride: int) -> jnp.ndarray:
+    """Element-level fallback fraction over the im2col operand."""
+    p2 = conv_patches_ref(xp, k, stride)
+    return psg_fallback_ratio_ref(p2, gy.reshape(-1, gy.shape[-1]), cfg)
+
+
 def psg_grad_w_oracle(x2: jnp.ndarray, gy2: jnp.ndarray, cfg: PSGConfig
                       ) -> jnp.ndarray:
     """Element-level Eq. (2) — identical semantics to the tile-level kernel:

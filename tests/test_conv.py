@@ -1,0 +1,254 @@
+"""Fused implicit-GEMM conv kernels (kernels/conv.py, DESIGN.md §Kernels).
+
+The acceptance property this module pins: the fused conv forward +
+PSG weight-gradient path (``PSGConfig.fused_conv``) is **bit-identical in
+output signs** to the materialized im2col + ``psg.matmul`` path on the
+paper's ResNet conv geometries — including the stride-2 transitions and
+the 1x1 downsample/pointwise convs — emits tile-fallback stats into the
+``psg_fallback_ratio`` telemetry, and dispatches through the
+reference/interpret/mosaic backend layer like every other kernel.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnns import cnn_model, resnet_conv_shapes
+from repro.core import psg
+from repro.core.config import (E2TrainConfig, Experiment, PSGConfig,
+                               SLUConfig, SMDConfig, TrainConfig)
+from repro.kernels import dispatch, ops, ref
+from repro.models.resnet import conv2d as model_conv2d
+
+CFG = PSGConfig(enabled=True)
+CFG_FUSED = PSGConfig(enabled=True, fused_conv=True)
+
+# every distinct conv KIND of the paper's ResNets at test batch, plus the
+# MobileNetV2-style pointwise shapes (non-128-multiple dout exercising the
+# kernel's dout padding); (batch, hw, cin, cout, k, stride)
+CONV_CASES = [pytest.param(*c, id=f"{c.kind}_{c.hw}x{c.cin}-{c.cout}"
+                           f"k{c.k}s{c.stride}")
+              for c in resnet_conv_shapes(depth=14, width=16, batch=2)]
+CONV_CASES += [
+    pytest.param(2, 8, 24, 40, 1, 1, id="point_8x24-40k1s1"),
+    pytest.param(1, 4, 40, 200, 1, 1, id="point_pad_4x40-200k1s1"),
+]
+
+
+def _data(B, H, C, Cout, k, s):
+    key = jax.random.PRNGKey(B + H + C + Cout + k + s)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (B, H, H, C)) * 0.5
+    w = jax.random.normal(k2, (k * k * C, Cout)) * 0.1
+    ho = -(-H // s)
+    gy = jax.random.normal(k3, (B, ho, ho, Cout)) * 0.01
+    return x, w, gy
+
+
+def _grads(loss, w, x):
+    return jax.grad(loss, argnums=(0, 1))(w, x)
+
+
+def _paths(x, w, gy, k, s):
+    """(y, dw, dx) through the im2col+psg.matmul path and the fused path."""
+    def im2col_loss(w_, x_):
+        with psg.enable(CFG):
+            y = model_conv2d({"w": w_}, x_, k=k, stride=s)
+        return jnp.sum(y * gy)
+
+    def fused_loss(w_, x_):
+        with psg.enable(CFG_FUSED):
+            y = model_conv2d({"w": w_}, x_, k=k, stride=s)
+        return jnp.sum(y * gy)
+
+    with psg.enable(CFG):
+        yA = model_conv2d({"w": w}, x, k=k, stride=s)
+    with psg.enable(CFG_FUSED):
+        yB = model_conv2d({"w": w}, x, k=k, stride=s)
+    dwA, dxA = _grads(im2col_loss, w, x)
+    dwB, dxB = _grads(fused_loss, w, x)
+    return (yA, dwA, dxA), (yB, dwB, dxB)
+
+
+# ---------------------------------------------------------------------------
+# parity with the materialized path (the tentpole acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,C,Cout,k,s", CONV_CASES)
+def test_fused_conv_parity_with_im2col_path(B, H, C, Cout, k, s):
+    """Forward values match to fp32 tap-summation tolerance; the PSG
+    weight-gradient SIGNS are bit-identical; dx matches numerically."""
+    x, w, gy = _data(B, H, C, Cout, k, s)
+    (yA, dwA, dxA), (yB, dwB, dxB) = _paths(x, w, gy, k, s)
+    np.testing.assert_allclose(np.asarray(yA), np.asarray(yB),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(dwA), np.asarray(dwB))
+    assert set(np.unique(np.asarray(dwB))).issubset({-1.0, 0.0, 1.0})
+    np.testing.assert_allclose(np.asarray(dxA), np.asarray(dxB),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,H,C,Cout,k,s", CONV_CASES)
+def test_fused_conv_grad_w_matches_element_oracle(B, H, C, Cout, k, s):
+    """The kernel's signs also match the element-level Eq. (2) oracle on
+    the (never materialized) im2col operand."""
+    x, w, gy = _data(B, H, C, Cout, k, s)
+    del w
+    if k < s:                      # psg.conv2d's 1x1-downsample normalization
+        x, s = x[:, ::s, ::s, :], 1
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0))) if pad else x
+    sign, fb = ops.conv_grad_w(xp, gy, CFG, k, s)
+    want = ref.conv_grad_w_ref(xp, gy, CFG, k, s)
+    np.testing.assert_array_equal(np.asarray(sign), np.asarray(want))
+    assert 0.0 <= float(fb) <= 1.0
+
+
+def test_fused_conv_fwd_matches_ref():
+    x, w, _ = _data(2, 16, 16, 32, 3, 1)
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    got = ops.conv_fwd(xp, w, 3, 1)
+    want = ref.conv_fwd_ref(xp, w, 3, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dispatch routing
+# ---------------------------------------------------------------------------
+
+
+def test_conv_dispatch_reference_vs_interpret():
+    x, w, gy = _data(2, 8, 16, 32, 3, 2)
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    with dispatch.override_backend("interpret"):
+        s_tile, fb_tile = dispatch.conv_grad_w(xp, gy, CFG, k=3, stride=2)
+        y_tile = dispatch.conv_fwd(xp, w, CFG, k=3, stride=2)
+    with dispatch.override_backend("reference"):
+        s_ref, fb_ref = dispatch.conv_grad_w(xp, gy, CFG, k=3, stride=2)
+        y_ref = dispatch.conv_fwd(xp, w, CFG, k=3, stride=2)
+    np.testing.assert_array_equal(np.asarray(s_tile), np.asarray(s_ref))
+    np.testing.assert_allclose(np.asarray(y_tile), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    assert 0.0 <= float(fb_tile) <= 1.0
+    assert 0.0 <= float(fb_ref) <= 1.0
+
+
+def test_fused_bwd_executes_conv_kernel_not_oracle():
+    """The traced fused backward must contain a pallas_call (and none when
+    pinned to the reference backend)."""
+    x, w, gy = _data(1, 8, 8, 16, 3, 1)
+
+    def loss(w_):
+        with psg.enable(CFG_FUSED):
+            return jnp.sum(model_conv2d({"w": w_}, x) * gy)
+
+    assert "pallas_call" in str(jax.make_jaxpr(jax.grad(loss))(w))
+    with dispatch.override_backend("reference"):
+        jaxpr_ref = str(jax.make_jaxpr(jax.grad(loss))(w))
+    assert "pallas_call" not in jaxpr_ref
+
+
+# ---------------------------------------------------------------------------
+# fallback stats reach the probe / training telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_fused_conv_probe_macs_accounting():
+    x, w, gy = _data(2, 8, 16, 16, 3, 1)
+
+    def loss(w_, probe):
+        with psg.enable(CFG_FUSED, probe=probe):
+            return jnp.sum(model_conv2d({"w": w_}, x) * gy)
+
+    pg = jax.grad(loss, argnums=1)(w, psg.zero_probe())
+    macs = 2 * 8 * 8 * (9 * 16) * 16        # B*Ho*Wo * k*k*C * Cout
+    assert float(pg[1]) == float(macs)
+    assert 0.0 <= float(pg[0]) <= float(macs)
+    assert 0.0 <= float(psg.probe_fallback_ratio(pg)) <= 1.0
+
+
+def test_fused_train_step_reports_fallback_and_energy():
+    """A full resnet train step with fused_conv emits the measured
+    psg_fallback_ratio and Trainer.energy_report() consumes it."""
+    from repro.data.synthetic import GaussianImageTask, make_image_batch
+    from repro.training.train_step import init_train_state
+    from repro.training.trainer import Trainer
+
+    e2 = E2TrainConfig(smd=SMDConfig(enabled=False),
+                       slu=SLUConfig(enabled=True, alpha=1e-3),
+                       psg=PSGConfig(enabled=True, swa=False,
+                                     fused_conv=True))
+    exp = Experiment(model=cnn_model("resnet8", 8, width=8), e2=e2,
+                     train=TrainConfig(global_batch=2, lr=0.05,
+                                       optimizer="psg", total_steps=8,
+                                       schedule="constant"),
+                     task="cifar_cnn")
+    task = GaussianImageTask(num_classes=10, snr=2.0)
+    tr = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp),
+                 lambda s, sh: make_image_batch(task, 0, s, sh, 2))
+    hist = tr.run(2)
+    assert all(0.0 < h["psg_fallback_ratio"] <= 1.0 for h in hist)
+    measured = tr.measured_psg_fallback()
+    assert measured is not None and 0.0 < measured <= 1.0
+    rep = tr.energy_report(steps=2).to_dict()
+    assert rep["psg"]["measured"] is not None
+    assert rep["psg"]["measured"] == pytest.approx(measured)
+
+
+def test_fused_train_matches_im2col_train_losses():
+    """Short resnet runs through both conv paths track each other.
+
+    Signs are bit-identical for identical inputs (pinned above), but the
+    forward is only fp-close (tap-summation order), so BatchNorm batch
+    statistics — and from step 2 on the whole trajectory — drift at fp
+    magnitude: the first step must agree tightly, the short curve within
+    a small band."""
+    from repro.data.synthetic import GaussianImageTask, make_image_batch
+    from repro.training.train_step import init_train_state
+    from repro.training.trainer import Trainer
+
+    task = GaussianImageTask(num_classes=10, snr=2.0)
+    mk = lambda s, sh: make_image_batch(task, 0, s, sh, 2)
+    curves = {}
+    for fused in (False, True):
+        e2 = E2TrainConfig(psg=PSGConfig(enabled=True, swa=False,
+                                         fused_conv=fused))
+        exp = Experiment(model=cnn_model("resnet8", 8, width=8), e2=e2,
+                         train=TrainConfig(global_batch=2, lr=0.05,
+                                           optimizer="psg", total_steps=8,
+                                           schedule="constant"),
+                         task="cifar_cnn")
+        tr = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk)
+        curves[fused] = [h["total_loss"] for h in tr.run(3)]
+    np.testing.assert_allclose(curves[False][0], curves[True][0], rtol=1e-4)
+    np.testing.assert_allclose(curves[False], curves[True], rtol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# layout + padding/masking (non-MXU-aligned dout)
+# ---------------------------------------------------------------------------
+
+
+def test_tap_major_round_trip():
+    from repro.kernels.conv import to_patch_major, to_tap_major
+    w = jnp.arange(9 * 5 * 7, dtype=jnp.float32).reshape(9 * 5, 7)
+    np.testing.assert_array_equal(
+        np.asarray(to_patch_major(to_tap_major(w, 3, 5), 3, 5)),
+        np.asarray(w))
+
+
+def test_conv_kernel_dout_padding_cropped():
+    """dout=200 pads to the clamped 128 tile (n_j=2, padded columns) and
+    the result is cropped back — shape and values must be unpadded."""
+    x, w, gy = _data(1, 4, 40, 200, 1, 1)
+    sign, fb = ops.conv_grad_w(x, gy, CFG, 1, 1)
+    assert sign.shape == (40, 200)
+    want = ref.conv_grad_w_ref(x, gy, CFG, 1, 1)
+    np.testing.assert_array_equal(np.asarray(sign), np.asarray(want))
+    y = ops.conv_fwd(x, w, 1, 1)
+    assert y.shape == (1, 4, 4, 200)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.conv_fwd_ref(x, w, 1, 1)),
+                               rtol=1e-5, atol=1e-5)

@@ -43,6 +43,57 @@ def test_psg_grad_w_matches_oracle(N, din, dout, dtype):
     assert 0.0 <= float(fb) <= 1.0
 
 
+# CIFAR geometry is never MXU-aligned: widths 16/32/64 give k*k*C reduction
+# dims of 144/288/576 and dout of 16/32/64 — none a multiple of 128.  The
+# kernel clamps its (BM, BN, BK) tiles to the operand extents and pads to
+# the clamped grid; these pin that the padding is masked out of the result
+# (exact oracle match, unpadded output shape) and that the fallback stats
+# grid matches the executed-tile count.
+CIFAR_TILE_SHAPES = [(2 * 32 * 32, 9 * 16, 16),   # stage-0 body, width 16
+                     (2 * 16 * 16, 9 * 32, 32),   # stage-1 body, width 32
+                     (2 * 8 * 8, 9 * 64, 64),     # stage-2 body, width 64
+                     (2 * 16 * 16, 16, 32),       # 1x1 projection shortcut
+                     (100, 145, 33)]              # nothing aligned at all
+
+
+@pytest.mark.parametrize("N,din,dout", CIFAR_TILE_SHAPES)
+def test_psg_grad_w_non_mxu_aligned_tiles(N, din, dout):
+    cfg = PSGConfig(enabled=True)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(N + din + dout))
+    x = jax.random.normal(k1, (N, din)) * 0.5
+    gy = jax.random.normal(k2, (N, dout)) * 0.01
+    got, fb = ops.psg_grad_w(x, gy, cfg)
+    assert got.shape == (din, dout)              # padding cropped
+    want = np.asarray(ref.psg_grad_w_ref(x, gy, cfg))
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert 0.0 <= float(fb) <= 1.0
+
+
+@pytest.mark.parametrize("N,din,dout", CIFAR_TILE_SHAPES[:3])
+def test_psg_kernel_stats_grid_matches_executed_tiles(N, din, dout):
+    """The raw kernel's per-tile stats grid covers exactly the padded tile
+    grid — ceil(din/BM) x ceil(dout/BN) with clamped tiles — so the mean
+    is the executed-tile fallback ratio (DESIGN.md §Dispatch caveat)."""
+    from repro.core.quant import quantize_int
+    from repro.kernels.psg_matmul import (DEFAULT_BM, DEFAULT_BN,
+                                          psg_grad_w_pallas)
+    cfg = PSGConfig(enabled=True)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(k1, (N, din))
+    gy = jax.random.normal(k2, (N, dout)) * 0.01
+    xm, _ = quantize_int(x, cfg.bits_x_msb)
+    gm, _ = quantize_int(gy, cfg.bits_g_msb)
+    xq, _ = quantize_int(x, cfg.bits_x)
+    gq, _ = quantize_int(gy, cfg.bits_g)
+    tau = cfg.beta * jnp.max(jnp.abs(
+        xm.astype(jnp.float32).T @ gm.astype(jnp.float32)))
+    out, stats = psg_grad_w_pallas(xm, gm, xq, gq, tau)
+    bm = min(DEFAULT_BM, din)
+    bn = min(DEFAULT_BN, dout)
+    assert stats.shape == (-(-din // bm), -(-dout // bn))
+    assert out.shape == (din, dout)
+
+
 @pytest.mark.parametrize("beta", [0.02, 0.05, 0.1, 0.3])
 def test_psg_threshold_beta_sweep(beta):
     cfg = PSGConfig(enabled=True, beta=beta)
