@@ -1,0 +1,62 @@
+"""Static cost-audit record (``run.py --json-audit`` -> BENCH_audit.json).
+
+No training, no timing: this bench reconciles the three static views of
+the repo's cost story (DESIGN.md §Analysis) —
+
+* the config-derived :class:`CostModel` tables (``core/cost.py``),
+* the jaxpr walker's per-layer counts over the traced predict programs
+  (``analysis/jaxpr_cost.py``),
+* the compiled-HLO totals (``launch/hlo_cost.py``),
+
+for both paper CIFAR backbones and the smoke LM, and runs the Pallas
+kernel linter plus the repository convention linter.  ``all_passed`` is
+the CI gate: any per-layer divergence above the declared tolerance, any
+unknown-trip-count loop, or any lint finding flips it false.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+
+def _experiments():
+    from repro.configs import smoke_experiment
+    from repro.configs.paper_cnns import mobilenetv2, resnet110, resnet74
+
+    return [resnet74(), resnet110(), mobilenetv2(),
+            smoke_experiment("llama3_8b")]
+
+
+def audit_json(fast: bool = True) -> dict:
+    from repro.analysis import audit_experiment, lint_repo, lint_shipped
+
+    audits = []
+    for exp in _experiments():
+        rep = audit_experiment(exp, batch=4)
+        audits.append(rep.to_dict())
+
+    kernel_findings = [str(f) for f in lint_shipped()]
+    repo_findings = [str(f) for f in lint_repo()]
+    all_passed = (all(a["passed"] for a in audits)
+                  and not kernel_findings and not repo_findings)
+    return {"audits": audits,
+            "kernel_lint": {"findings": kernel_findings,
+                            "passed": not kernel_findings},
+            "repo_lint": {"findings": repo_findings,
+                          "passed": not repo_findings},
+            "all_passed": all_passed}
+
+
+def run(fast: bool = True) -> Iterable[str]:
+    """CSV rows for the default bench table (pass/fail as derived column)."""
+    from repro.analysis import audit_experiment, lint_repo, lint_shipped
+
+    rows: List[str] = []
+    for exp in _experiments():
+        rep = audit_experiment(exp, batch=4)
+        rows.append(f"audit_{rep.model},0.0,"
+                    f"{'pass' if rep.passed else 'FAIL'}:"
+                    f"hlo_rel={rep.hlo_rel_diff:.4f}")
+    nk, nr = len(lint_shipped()), len(lint_repo())
+    rows.append(f"kernel_lint,0.0,{'pass' if nk == 0 else f'FAIL:{nk}'}")
+    rows.append(f"repo_lint,0.0,{'pass' if nr == 0 else f'FAIL:{nr}'}")
+    return rows

@@ -17,7 +17,13 @@ chunked loop and the chunk speedup on the depth-14 ResNet CPU configs
 fused-conv trajectory: implicit-GEMM vs materialized-im2col activation
 bytes moved per training step on the paper-shaped ResNet-74 config plus
 per-shape rows and a CPU proxy steps/s A/B (benchmarks/bench_conv.py).
-CI uploads all three BENCH JSONs.
+
+``--json-audit [PATH]`` (default ``BENCH_audit.json``) records the static
+cost audit: per-layer CostModel vs jaxpr vs compiled-HLO reconciliation
+for the paper backbones and the smoke LM, plus the Pallas kernel linter
+and the repo convention linter (benchmarks/bench_audit.py).  Exits
+nonzero when the audit or a linter fails — this is the CI gate.
+CI uploads all four BENCH JSONs.
 """
 from __future__ import annotations
 
@@ -51,7 +57,8 @@ def energy_json(fast: bool = True) -> dict:
         op = E2TrainConfig(smd=SMDConfig(enabled=True, drop_prob=0.5),
                            slu=SLUConfig(enabled=True, target_skip=skip),
                            psg=PSGConfig(enabled=True))
-        table3.append(EnergyLedger(resnet74(e2=op)).report().to_dict())
+        table3.append(EnergyLedger(resnet74(e2=op))
+                      .report(validate_against_hlo=True).to_dict())
 
     # measured: a short full-E²-Train CNN run through the shared Trainer
     depth, steps = (14, 12) if fast else (26, 40)
@@ -69,7 +76,8 @@ def energy_json(fast: bool = True) -> dict:
                  lambda s, sh: make_image_batch(task, 0, s, sh, 8))
     tr.run(steps)
     return {"table3_config_derived": table3,
-            "measured_run": tr.energy_report(steps=steps).to_dict()}
+            "measured_run": tr.energy_report(
+                steps=steps, validate_against_hlo=True).to_dict()}
 
 
 def main(argv=None) -> None:
@@ -77,7 +85,8 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (smd,slu,psg,e2train,"
-                         "cnn,convergence,kernels,throughput,roofline)")
+                         "cnn,convergence,kernels,throughput,roofline,"
+                         "audit)")
     ap.add_argument("--json", nargs="?", const="BENCH_energy.json",
                     default=None, metavar="PATH",
                     help="write the EnergyReport trajectory record to PATH "
@@ -93,10 +102,16 @@ def main(argv=None) -> None:
                     help="write the fused-conv record (implicit-GEMM vs "
                          "im2col: activation bytes moved + CPU proxy "
                          "steps/s) to PATH and exit (skips the CSV benches)")
+    ap.add_argument("--json-audit", nargs="?", const="BENCH_audit.json",
+                    default=None, metavar="PATH",
+                    help="write the static cost-audit record (CostModel vs "
+                         "jaxpr vs HLO + kernel/repo lint) to PATH and exit "
+                         "nonzero on divergence or lint findings")
     args = ap.parse_args(argv)
     fast = not args.full
 
-    if args.json or args.json_throughput or args.json_conv:  # write all given
+    if args.json or args.json_throughput or args.json_conv \
+            or args.json_audit:                              # write all given
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(energy_json(fast=fast), f, indent=2)
@@ -111,11 +126,20 @@ def main(argv=None) -> None:
             with open(args.json_conv, "w") as f:
                 json.dump(conv_json(fast=fast), f, indent=2)
             print(f"wrote {args.json_conv}", file=sys.stderr)
+        if args.json_audit:
+            from benchmarks.bench_audit import audit_json
+            record = audit_json(fast=fast)
+            with open(args.json_audit, "w") as f:
+                json.dump(record, f, indent=2)
+            print(f"wrote {args.json_audit}", file=sys.stderr)
+            if not record["all_passed"]:
+                sys.exit(1)
         return
 
-    from benchmarks import (bench_cnn, bench_conv, bench_convergence,
-                            bench_e2train, bench_kernels, bench_psg,
-                            bench_slu, bench_smd, bench_throughput, roofline)
+    from benchmarks import (bench_audit, bench_cnn, bench_conv,
+                            bench_convergence, bench_e2train, bench_kernels,
+                            bench_psg, bench_slu, bench_smd,
+                            bench_throughput, roofline)
 
     benches = {
         "smd": bench_smd.run,           # Fig. 3a/3b, Tab. 1
@@ -128,6 +152,7 @@ def main(argv=None) -> None:
         "conv": bench_conv.run,         # §Kernels (implicit-GEMM vs im2col)
         "throughput": bench_throughput.run,  # §Loop (chunked vs per-step)
         "roofline": roofline.run,       # §Roofline (from dry-run artifact)
+        "audit": bench_audit.run,       # §Analysis (static cost audit)
     }
     only = set(args.only.split(",")) if args.only else set(benches)
 

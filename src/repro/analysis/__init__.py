@@ -1,0 +1,35 @@
+"""Static cost-audit subsystem (DESIGN.md §Analysis).
+
+The energy story rests on three independent witnesses of the same program:
+
+* ``core/cost.py`` — hand-written per-layer MAC/byte tables (what the
+  paper's arithmetic *assumes*);
+* ``analysis/jaxpr_cost.py`` — per-primitive counts walked out of the
+  *traced* train/predict jaxprs, attributed back to named layers
+  (what jax will actually ask the compiler to run);
+* ``launch/hlo_cost.py`` — counts re-derived from the *compiled* HLO
+  (what the backend actually schedules).
+
+``analysis/audit.py`` three-way-diffs them into an :class:`AuditReport`
+with a pass/fail verdict under a declared tolerance — divergence is a bug
+in one of the witnesses, never a rounding detail to shrug at.
+
+``analysis/kernel_lint.py`` statically checks every Pallas kernel
+registered through ``kernels/dispatch.py`` (VMEM budget, MXU tile
+alignment, BlockSpec index-map coverage, accumulator init/finish
+discipline), and ``analysis/repo_lint.py`` enforces repo conventions
+(no ``pl.pallas_call`` outside ``kernels/``, no ``REPRO_*`` env reads
+outside the dispatch layer).
+"""
+from repro.analysis.audit import (AuditReport, LayerRow, audit_experiment,
+                                  audit_totals)
+from repro.analysis.jaxpr_cost import (OpCounts, ProgramCosts, jaxpr_costs,
+                                       scope_tag)
+from repro.analysis.kernel_lint import LintFinding, lint_jaxpr, lint_shipped
+from repro.analysis.repo_lint import lint_repo
+
+__all__ = [
+    "AuditReport", "LayerRow", "audit_experiment", "audit_totals",
+    "OpCounts", "ProgramCosts", "jaxpr_costs", "scope_tag",
+    "LintFinding", "lint_jaxpr", "lint_shipped", "lint_repo",
+]

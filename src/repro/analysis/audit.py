@@ -1,0 +1,309 @@
+"""Three-way cost reconciliation: CostModel vs traced jaxpr vs compiled HLO.
+
+The energy claims rest on ``core/cost.py``'s hand-written tables.  This
+module checks them against two independent witnesses of the same program:
+
+* **jaxpr** — :mod:`repro.analysis.jaxpr_cost` walks the abstractly traced
+  predict program and attributes MACs to the ``cost:`` scopes the models
+  declare.  Compared *per layer group* against the table.
+* **HLO** — ``launch/hlo_cost.analyze`` re-derives FLOP totals from the
+  compiled module.  HLO carries no layer attribution (fusion destroys it),
+  so this column reconciles at the *totals* level only.
+
+Semantics (DESIGN.md §Analysis):
+
+* ``None`` ≠ 0 everywhere.  A group priced by only one witness gets
+  ``None`` in the other column and **fails** — a layer the table forgot,
+  or a scope the table prices but the trace never runs, is exactly the
+  bug this audit exists to catch.  A group both witnesses price at zero
+  passes trivially.
+* Tolerance is *declared per audit* and recorded in the report.  CIFAR
+  backbones reconcile to within 1% (the table and the trace count the
+  same convolutions); the LM table is an analytic model
+  (``core/energy.block_fwd_flops``) and gets 5%.  Divergence above
+  tolerance is a verdict, not a warning.
+* An ``unknown_trip_count`` from the HLO analyzer poisons the HLO column:
+  a guessed while-trip can understate totals by orders of magnitude, so
+  the audit fails rather than reconciling against a guess.
+
+Per-group MAC witnesses: conv/fc/block/head table kinds reconcile against
+``dot_macs + conv_macs``; the MobileNetV2 depthwise kind (an explicit
+broadcast-multiply + sum in ``models/resnet.py``) reconciles against
+``mul_flops``; bn/embed kinds carry no MAC-bearing compute and are
+excluded from the MAC reconciliation (their movement is still in the
+byte totals).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_cost import ProgramCosts, jaxpr_costs
+from repro.core.config import Experiment
+from repro.core.cost import TableCostModel
+
+# MAC-bearing table kinds and which jaxpr counter witnesses them
+_DOT_KINDS = ("conv", "fc", "block", "head", "embed")
+_MUL_KINDS = ("dw",)
+
+# declared per-task tolerances: the CNN tables count the very convolutions
+# the trace runs; the LM table is analytic
+TOL_BY_TASK = {"cifar_cnn": 0.01, "lm": 0.05}
+# compiled-HLO totals include the fused elementwise selects/pads/clamp
+# expansions the walker classifies as data movement; measured divergence is
+# 0.02% (resnet110), 0.4% (lm), 2.3% (mobilenetv2 — elementwise-heavy)
+HLO_TOL = 0.03
+
+_RESNET_LAYER = re.compile(r"^s(\d+)b(\d+)\.")
+_MBV2_LAYER = re.compile(r"^b(\d+)\.")
+_LM_BLOCK = re.compile(r"^block\d+\.")
+
+
+@dataclass(frozen=True)
+class LayerRow:
+    """One layer group's two-way CostModel-vs-jaxpr reconciliation.
+
+    ``None`` means that witness prices nothing MAC-bearing for the group —
+    which is a failure when the other witness does (None ≠ 0).
+    """
+
+    group: str
+    cost_macs: Optional[float]
+    jaxpr_macs: Optional[float]
+    abs_diff: Optional[float]
+    rel_diff: Optional[float]
+    ok: bool
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclass(frozen=True)
+class AuditReport:
+    """Per-layer + totals verdict for one experiment's predict program."""
+
+    model: str
+    task: str
+    batch: int
+    seq_len: Optional[int]
+    tolerance: float
+    hlo_tolerance: float
+    rows: Tuple[LayerRow, ...]
+    cost_total_macs: float
+    jaxpr_total_macs: float
+    jaxpr_total_flops: float
+    jaxpr_unknown_trips: int
+    hlo_total_flops: Optional[float]        # None = HLO column not computed
+    hlo_rel_diff: Optional[float]
+    hlo_unknown_trips: Optional[float]
+    passed: bool
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["rows"] = [r.to_dict() for r in self.rows]
+        return d
+
+    def failures(self) -> Tuple[str, ...]:
+        out = [f"layer {r.group}: cost={r.cost_macs} jaxpr={r.jaxpr_macs} "
+               f"rel={r.rel_diff}" for r in self.rows if not r.ok]
+        if self.hlo_unknown_trips:
+            out.append(f"hlo: {self.hlo_unknown_trips:.0f} unknown-trip "
+                       "while loop(s) — totals untrustworthy")
+        if self.hlo_rel_diff is not None and self.hlo_rel_diff > self.hlo_tolerance:
+            out.append(f"hlo totals: rel={self.hlo_rel_diff:.4f} > "
+                       f"{self.hlo_tolerance}")
+        return tuple(out)
+
+    def summary(self) -> str:
+        lines = [f"cost audit: {self.model} ({self.task}) batch={self.batch}"
+                 f" tol={self.tolerance:.0%}"
+                 f" -> {'PASS' if self.passed else 'FAIL'}"]
+        for r in self.rows:
+            fmt = lambda v: "—" if v is None else f"{v:,.0f}"
+            rel = "—" if r.rel_diff is None else f"{r.rel_diff:.4%}"
+            lines.append(f"  {'ok' if r.ok else 'XX'} {r.group:<12}"
+                         f" cost={fmt(r.cost_macs):>16} jaxpr="
+                         f"{fmt(r.jaxpr_macs):>16} rel={rel}")
+        hlo = ("—" if self.hlo_total_flops is None
+               else f"{self.hlo_total_flops:,.0f}"
+                    f" (rel={self.hlo_rel_diff:.4%})")
+        lines.append(f"  totals: cost_macs={self.cost_total_macs:,.0f}"
+                     f" jaxpr_macs={self.jaxpr_total_macs:,.0f}"
+                     f" hlo_flops={hlo}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# layer-name -> scope-group mapping (inverse of the models' cost: scopes)
+# ---------------------------------------------------------------------------
+
+
+def _group_of(layer_name: str, task: str) -> str:
+    """The ``cost:`` scope group a cost-table layer's compute lands in.
+
+    Mirrors the ``jax.named_scope`` placement in ``models/resnet.py`` /
+    ``models/transformer.py``: scanned ResNet stages collapse to
+    ``s{i}.rest``, MobileNetV2 depthwise stays its own group inside
+    ``b{i}``, LM blocks all run inside the single scanned ``unit`` scope.
+    """
+    if task == "lm":
+        if _LM_BLOCK.match(layer_name):
+            return "unit"
+        return layer_name                       # embed / head
+    m = _RESNET_LAYER.match(layer_name)
+    if m:
+        return (f"s{m.group(1)}.trans" if int(m.group(2)) == 0
+                else f"s{m.group(1)}.rest")
+    m = _MBV2_LAYER.match(layer_name)
+    if m:
+        return layer_name if layer_name.endswith(".dw") else f"b{m.group(1)}"
+    if layer_name in ("stem_bn",):
+        return "stem"
+    if layer_name in ("head_bn",):
+        return "head"
+    return layer_name                           # stem / head / fc
+
+
+def _table_group_macs(cost: TableCostModel, task: str
+                      ) -> Dict[str, Tuple[float, str]]:
+    """group -> (MAC total, witness kind: 'dot'|'mul') over MAC-bearing
+    layers.  bn layers are excluded (no contraction to witness)."""
+    groups: Dict[str, Tuple[float, str]] = {}
+    for layer in cost.layers:
+        if layer.kind in _MUL_KINDS:
+            witness = "mul"
+        elif layer.kind in _DOT_KINDS:
+            witness = "dot"
+        else:
+            continue
+        g = _group_of(layer.name, task)
+        macs, w = groups.get(g, (0.0, witness))
+        groups[g] = (macs + layer.macs, w)
+    return groups
+
+
+def _trace_group_macs(pc: ProgramCosts, witness_of: Dict[str, str],
+                      batch: int) -> Dict[str, float]:
+    """group -> per-example MACs from the walked trace.  Groups the table
+    doesn't know get the dot witness (so stray compute still surfaces)."""
+    out: Dict[str, float] = {}
+    for scope, c in pc.by_scope.items():
+        w = witness_of.get(scope, "dot")
+        macs = c.mul_flops if w == "mul" else c.macs()
+        if macs > 0 or scope in witness_of:
+            out[scope] = macs / batch
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the audit
+# ---------------------------------------------------------------------------
+
+
+def _abstract_inputs(exp: Experiment, batch: int):
+    """(params, model_state, batch) ShapeDtypeStruct trees for the task's
+    predict program — nothing is allocated or executed."""
+    from repro.tasks import get_task
+    task = get_task(exp.task)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params, mstate = jax.eval_shape(lambda k: task.init(k, exp), key)
+    if exp.task == "lm":
+        data = {"tokens": jax.ShapeDtypeStruct((batch, exp.train.seq_len),
+                                               jnp.int32)}
+    else:
+        data = {"image": jax.ShapeDtypeStruct((batch, 32, 32, 3),
+                                              jnp.float32),
+                "label": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+    return task.make_predict(exp), params, mstate, data
+
+
+def audit_experiment(exp: Experiment, batch: int = 8,
+                     tolerance: Optional[float] = None,
+                     with_hlo: bool = True) -> AuditReport:
+    """Reconcile one experiment's CostModel against its traced predict
+    program (per layer group) and its compiled HLO (totals)."""
+    from repro.launch import hlo_cost
+    from repro.tasks import cost_model
+
+    tol = TOL_BY_TASK.get(exp.task, 0.05) if tolerance is None else tolerance
+    cost = cost_model(exp)
+    predict, params, mstate, data = _abstract_inputs(exp, batch)
+    pc = jaxpr_costs(predict, params, mstate, data)
+
+    table = _table_group_macs(cost, exp.task)
+    witness_of = {g: w for g, (_, w) in table.items()}
+    trace = _trace_group_macs(pc, witness_of, batch)
+
+    rows = []
+    for g in sorted(set(table) | set(trace)):
+        cm = table.get(g, (None,))[0]
+        jm = trace.get(g)
+        if cm is None or jm is None:
+            both_zero = (cm in (None, 0.0)) and (jm in (None, 0.0))
+            rows.append(LayerRow(g, cm, jm, None, None, ok=both_zero))
+            continue
+        abs_d = abs(cm - jm)
+        denom = max(cm, jm)
+        rel = abs_d / denom if denom else 0.0
+        rows.append(LayerRow(g, cm, jm, abs_d, rel, ok=rel <= tol))
+
+    tot = pc.total()
+    jaxpr_macs = sum(v for v in trace.values())
+    cost_macs = sum(m for m, _ in table.values())
+
+    hlo_flops = hlo_rel = hlo_unknown = None
+    if with_hlo:
+        hlo = jax.jit(predict).lower(params, mstate, data).compile().as_text()
+        totals = hlo_cost.analyze(hlo)
+        hlo_flops = totals["flops"]
+        hlo_unknown = totals["unknown_trip_count"]
+        denom = max(hlo_flops, tot.flops())
+        hlo_rel = abs(hlo_flops - tot.flops()) / denom if denom else 0.0
+
+    passed = all(r.ok for r in rows) and pc.unknown_trips == 0
+    if with_hlo:
+        passed = passed and not hlo_unknown and hlo_rel <= HLO_TOL
+
+    return AuditReport(
+        model=exp.model.name, task=exp.task, batch=batch,
+        seq_len=exp.train.seq_len if exp.task == "lm" else None,
+        tolerance=tol, hlo_tolerance=HLO_TOL, rows=tuple(rows),
+        cost_total_macs=cost_macs, jaxpr_total_macs=jaxpr_macs,
+        jaxpr_total_flops=tot.flops() / batch,
+        jaxpr_unknown_trips=pc.unknown_trips,
+        hlo_total_flops=hlo_flops, hlo_rel_diff=hlo_rel,
+        hlo_unknown_trips=hlo_unknown, passed=passed)
+
+
+def audit_totals(exp: Experiment, batch: int = 8,
+                 with_hlo: bool = True) -> Dict[str, Any]:
+    """Totals-level view of :func:`audit_experiment` (the BENCH record)."""
+    rep = audit_experiment(exp, batch=batch, with_hlo=with_hlo)
+    return {"model": rep.model, "task": rep.task,
+            "cost_total_macs": rep.cost_total_macs,
+            "jaxpr_total_macs": rep.jaxpr_total_macs,
+            "hlo_total_flops": rep.hlo_total_flops,
+            "hlo_rel_diff": rep.hlo_rel_diff,
+            "passed": rep.passed, "failures": list(rep.failures())}
+
+
+# verdict cache for EnergyReport.validated_against_hlo: the audit traces and
+# compiles the predict program, so the ledger must not re-run it per report
+# (the Table 3 sweep prices the same backbone three times)
+_VERDICT_CACHE: Dict[Tuple[str, str, int, Optional[int]], bool] = {}
+
+
+def validated_verdict(exp: Experiment, batch: int = 4) -> bool:
+    """Cached pass/fail of the three-way audit for this experiment's
+    architecture (PSG/SLU operating points don't change the eval program,
+    so the verdict is keyed on model identity, not the full config)."""
+    key = (exp.model.name, exp.task, batch,
+           exp.train.seq_len if exp.task == "lm" else None)
+    if key not in _VERDICT_CACHE:
+        _VERDICT_CACHE[key] = audit_experiment(exp, batch=batch).passed
+    return _VERDICT_CACHE[key]

@@ -1,0 +1,136 @@
+"""Repository convention linter (AST-based, no imports executed).
+
+Two conventions this repo's architecture depends on (DESIGN.md §Dispatch,
+§Analysis), enforced statically over ``src/repro``:
+
+* ``pallas-outside-kernels`` — only modules under ``kernels/`` may call
+  ``pl.pallas_call``.  Everything else goes through the dispatch layer
+  (``kernels/dispatch.py``), which is what keeps backend selection in one
+  place and keeps the kernel linter's shipped-kernel registry exhaustive.
+* ``env-read`` — no module may read ``REPRO_*`` environment variables
+  except the single import-time read of ``REPRO_KERNEL_BACKEND`` in
+  ``kernels/dispatch.py``.  The seed repo's scattered trace-time env reads
+  (``REPRO_PALLAS_COMPILE``, ``REPRO_PSG_INT8_GATHER``) were retired in the
+  dispatch refactor precisely because an env read inside traced code bakes
+  into whichever jit cache entry traced first.
+
+Run as a module (``python -m repro.analysis.repo_lint``) it exits nonzero
+on any finding — that is the CI hook.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+# files (relative to the src root, posix separators) allowed to call
+# pl.pallas_call
+_PALLAS_ALLOWED_PREFIX = "repro/kernels/"
+# the one sanctioned REPRO_* env read: (file, variable)
+_ENV_ALLOWED = {("repro/kernels/dispatch.py", "REPRO_KERNEL_BACKEND")}
+
+
+@dataclass(frozen=True)
+class RepoFinding:
+    path: str          # src-root-relative, posix
+    line: int
+    rule: str          # "pallas-outside-kernels" | "env-read"
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _attr_chain(node: ast.AST) -> Optional[str]:
+    """Dotted name of an attribute/name chain (``os.environ.get``), or None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def _env_var_of(node: ast.AST) -> Optional[Tuple[str, int]]:
+    """(REPRO_* name, lineno) if this node reads such an env var."""
+    if isinstance(node, ast.Call):
+        chain = _attr_chain(node.func) or ""
+        if chain.endswith("os.getenv") or chain == "getenv" \
+                or chain.endswith("environ.get"):
+            if node.args:
+                name = _const_str(node.args[0])
+                if name and name.startswith("REPRO_"):
+                    return name, node.lineno
+    if isinstance(node, ast.Subscript):
+        chain = _attr_chain(node.value) or ""
+        if chain.endswith("os.environ") or chain == "environ":
+            name = _const_str(node.slice)
+            if name and name.startswith("REPRO_"):
+                return name, node.lineno
+    return None
+
+
+def lint_source(src: str, relpath: str) -> List[RepoFinding]:
+    """Lint one module's source text (``relpath`` is src-root-relative)."""
+    findings: List[RepoFinding] = []
+    tree = ast.parse(src, filename=relpath)
+    in_kernels = relpath.startswith(_PALLAS_ALLOWED_PREFIX)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "pallas_call" \
+                and not in_kernels:
+            findings.append(RepoFinding(
+                relpath, node.lineno, "pallas-outside-kernels",
+                "pl.pallas_call outside kernels/ — route through "
+                "repro.kernels.dispatch"))
+        env = _env_var_of(node)
+        if env is not None:
+            name, line = env
+            if (relpath, name) not in _ENV_ALLOWED:
+                findings.append(RepoFinding(
+                    relpath, line, "env-read",
+                    f"reads {name} — environment selection belongs to the "
+                    "single import-time read in kernels/dispatch.py"))
+    return findings
+
+
+def _src_root() -> str:
+    # .../src/repro/analysis/repo_lint.py -> .../src
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def lint_repo(src_root: Optional[str] = None) -> List[RepoFinding]:
+    """Lint every ``.py`` under ``<src_root>/repro``; [] means clean."""
+    root = src_root or _src_root()
+    findings: List[RepoFinding] = []
+    pkg = os.path.join(root, "repro")
+    for dirpath, _dirnames, filenames in os.walk(pkg):
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            with open(path, "r", encoding="utf-8") as f:
+                findings.extend(lint_source(f.read(), rel))
+    return sorted(findings, key=lambda f: (f.path, f.line))
+
+
+def main() -> int:
+    findings = lint_repo()
+    for f in findings:
+        print(f)
+    print(f"repo lint: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

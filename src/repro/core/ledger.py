@@ -88,6 +88,11 @@ class EnergyReport:
     energy_pj_measured: Optional[float]
     energy_savings_assumed: float
     energy_savings_measured: Optional[float]
+    # cost-table verdict from the static audit (analysis/audit.py): True
+    # when the CostModel MACs behind this report reconciled against the
+    # traced-jaxpr and compiled-HLO counts, False when the audit ran and
+    # diverged, None when no audit was requested — None ≠ False.
+    validated_against_hlo: Optional[bool] = None
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -117,6 +122,9 @@ class EnergyReport:
             f"  45nm energy savings:   assumed {fmt(self.energy_savings_assumed, True)}"
             f" | measured {fmt(self.energy_savings_measured, True)}"
             f" (baseline {self.energy_pj_baseline:.3e} pJ)",
+            f"  cost table validated vs jaxpr/HLO: "
+            + ("—" if self.validated_against_hlo is None
+               else "yes" if self.validated_against_hlo else "NO"),
         ]
         return "\n".join(lines)
 
@@ -202,8 +210,17 @@ class EnergyLedger:
 
     # ----- the report -----
 
-    def report(self, steps: Optional[int] = None) -> EnergyReport:
+    def report(self, steps: Optional[int] = None,
+               validate_against_hlo: bool = False) -> EnergyReport:
+        """Build the report; with ``validate_against_hlo`` also run the
+        static cost audit (cached per config) and stamp its verdict into
+        ``EnergyReport.validated_against_hlo``."""
         exp, cost = self.exp, self.cost
+        verdict: Optional[bool] = None
+        if validate_against_hlo:
+            # deferred: analysis imports tasks imports core
+            from repro.analysis.audit import validated_verdict
+            verdict = validated_verdict(exp)
         e2, tc = exp.e2, exp.train
         steps = steps if steps is not None else tc.total_steps
         batch = tc.global_batch
@@ -289,4 +306,5 @@ class EnergyLedger:
             energy_pj_measured=e_measured,
             energy_savings_assumed=1.0 - e_assumed / baseline,
             energy_savings_measured=(
-                None if e_measured is None else 1.0 - e_measured / baseline))
+                None if e_measured is None else 1.0 - e_measured / baseline),
+            validated_against_hlo=verdict)

@@ -28,9 +28,10 @@ traced first).  No environment variable is consulted inside jitted code.
 from __future__ import annotations
 
 import contextlib
+import functools
 import os
 import threading
-from typing import Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -184,3 +185,68 @@ def conv_grad_w(xp: jnp.ndarray, gy: jnp.ndarray, cfg: PSGConfig,
                 ref.conv_fallback_ratio_ref(xf, gf, cfg, k, stride))
     return ops.conv_grad_w(xf, gf, cfg, k, stride,
                            interpret=backend != BACKEND_MOSAIC)
+
+
+# ---------------------------------------------------------------------------
+# shipped-kernel registry — the kernel linter's worklist
+# ---------------------------------------------------------------------------
+
+
+def shipped_kernels() -> Dict[str, Tuple[Callable, tuple]]:
+    """Every Pallas kernel this repo ships, with a representative abstract
+    instantiation: ``name -> (fn, args)`` where ``args`` are
+    :class:`jax.ShapeDtypeStruct` trees suitable for ``jax.make_jaxpr(fn)``.
+
+    The static kernel linter (``analysis/kernel_lint.py``) traces each entry
+    and checks VMEM budgets, MXU tile alignment, BlockSpec index-map
+    coverage, and accumulator init/finish discipline.  Shapes are chosen so
+    every grid has more than one step along each axis the kernel tiles —
+    a coverage or accumulator bug cannot hide behind a degenerate grid.
+    """
+    from repro.kernels import conv, flash_attn, psg_matmul, quant
+
+    f32 = jnp.float32
+    i8 = jnp.int8
+    i16 = jnp.int16
+    S = jax.ShapeDtypeStruct
+    # PSG matmul operands: N=1024 tokens, din=256 -> dout=256 (grid 2x2x2)
+    xm, gm = S((1024, 256), i8), S((1024, 256), i8)
+    xq, gq = S((1024, 256), i8), S((1024, 256), i16)
+    tau = S((), f32)
+    # conv operands: CIFAR stage geometry, pre-padded NHWC input, dout=256
+    # so the output-channel axis tiles (grid (B, 2) / (2, B))
+    cx = S((4, 34, 34, 16), f32)            # 32x32 + k=3 halo
+    cw = S((3 * 3 * 16, 256), f32)          # patch-major weight
+    cg = S((4, 32, 32, 256), f32)
+    # attention operands: S=256 (2 q-blocks, 2 kv-blocks), GQA 4->2 heads
+    q = S((2, 256, 4, 128), f32)
+    kv = S((2, 256, 2, 128), f32)
+    return {
+        "psg_grad_w_pallas": (
+            lambda a, b, c, d, t: psg_matmul.psg_grad_w_pallas(
+                a, b, c, d, t, interpret=True),
+            (xm, gm, xq, gq, tau)),
+        "predictor_matmul_pallas": (
+            lambda a, b: psg_matmul.predictor_matmul_pallas(
+                a, b, interpret=True),
+            (xm, gm)),
+        "conv_fwd_pallas": (
+            functools.partial(conv.conv_fwd_pallas, k=3, stride=1,
+                              interpret=True),
+            (cx, cw)),
+        "conv_grad_w_predictor_pallas": (
+            functools.partial(conv.conv_grad_w_predictor_pallas, k=3,
+                              stride=1, interpret=True),
+            (cx, cg)),
+        "conv_grad_w_pallas": (
+            lambda a, b, c, d, t: conv.conv_grad_w_pallas(
+                a, b, c, d, t, k=3, stride=1, interpret=True),
+            (cx, cg, cx, cg, tau)),
+        "quantize_pallas": (
+            functools.partial(quant.quantize_pallas, bits=8, interpret=True),
+            (S((512, 1024), f32),)),
+        "flash_attention": (
+            functools.partial(flash_attn.flash_attention, causal=True,
+                              interpret=True),
+            (q, kv, kv)),
+    }

@@ -124,10 +124,18 @@ def split_computations(hlo: str) -> Dict[str, Computation]:
     return comps
 
 
-def _trip_count(cond: Computation) -> int:
+def _trip_count(cond: Computation) -> Tuple[int, bool]:
     """Counted loops compare the induction variable against a bound; read
     the bound from the constant feeding the compare (not any constant in
-    the condition — shapes/limits would inflate the count)."""
+    the condition — shapes/limits would inflate the count).
+
+    Returns ``(trips, known)``.  ``known`` is True only when the bound was
+    actually recovered from the compare; the heuristic fallbacks (max
+    plausible constant, or 1 when the condition holds no constant at all)
+    are *guesses* and must be flagged, not silently folded into the totals
+    — an unknown-trip loop counted once understates a 4096-step scan by
+    three orders of magnitude.
+    """
     consts: Dict[str, int] = {}
     for l in cond.lines:
         m = re.match(r"(?:ROOT\s+)?%?([\w.\-]+)\s*=.*?\bconstant\((\d+)\)",
@@ -141,10 +149,10 @@ def _trip_count(cond: Computation) -> int:
                 if name in consts and 1 < consts[name] <= 10_000_000:
                     best = max(best, consts[name])
     if best:
-        return best
-    # fallback: max plausible constant
+        return best, True
+    # fallback: max plausible constant — a guess, surfaced as unknown
     vals = [v for v in consts.values() if 1 < v <= 10_000_000]
-    return max(vals) if vals else 1
+    return (max(vals) if vals else 1), False
 
 
 class HloCost:
@@ -153,6 +161,10 @@ class HloCost:
         self._memo: Dict[str, Tuple[float, float, float]] = {}
         m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
         self.entry = m.group(1) if m else next(iter(self.comps), "")
+        # while-loops whose trip count had to be guessed: totals() surfaces
+        # the tally so consumers (analysis/audit.py) warn instead of
+        # trusting a potentially orders-of-magnitude undercount
+        self.unknown_trip_loops = 0
 
     # ------------------------------------------------------------------
     def _dot_flops(self, comp: Computation, line: str) -> float:
@@ -278,9 +290,13 @@ class HloCost:
                 mkt = re.search(r"known_trip_count[^0-9]*?(\d+)", line)
                 if mkt:
                     trips = int(mkt.group(1))
+                elif mc and mc.group(1) in self.comps:
+                    trips, known = _trip_count(self.comps[mc.group(1)])
+                    if not known:
+                        self.unknown_trip_loops += 1
                 else:
-                    trips = _trip_count(self.comps[mc.group(1)]) \
-                        if mc and mc.group(1) in self.comps else 1
+                    trips = 1
+                    self.unknown_trip_loops += 1
                 bf, bb, bc = self._comp_cost(mb.group(1)) if mb else (0, 0, 0)
                 # VMEM residency: loop-invariant small operands (recurrent
                 # weights etc.) stay in VMEM across iterations on TPU —
@@ -332,7 +348,8 @@ class HloCost:
 
     def totals(self) -> Dict[str, float]:
         fl, io, co = self._comp_cost(self.entry)
-        return {"flops": fl, "bytes": io, "collective_bytes": co}
+        return {"flops": fl, "bytes": io, "collective_bytes": co,
+                "unknown_trip_count": float(self.unknown_trip_loops)}
 
 
 def analyze(hlo: str) -> Dict[str, float]:

@@ -243,29 +243,36 @@ def resnet_fwd(p: Params, state: Params, x: jnp.ndarray, depth: int,
     gate_params = p.get("slu_gate")
     n_blocks = 3 * n
 
-    h, ns_stem = batchnorm(p["stem_bn"], state["stem_bn"],
-                           conv2d(p["stem"], x), train)
-    h = jax.nn.relu(h)
+    # "cost:<group>" scopes are the attribution anchors the static audit
+    # reads back out of the traced jaxpr (analysis/jaxpr_cost.py); group
+    # names follow core/cost.py's layer prefixes (s{i}b0 -> s{i}.trans,
+    # s{i}b{1..} -> s{i}.rest).
+    with jax.named_scope("cost:stem"):
+        h, ns_stem = batchnorm(p["stem_bn"], state["stem_bn"],
+                               conv2d(p["stem"], x), train)
+        h = jax.nn.relu(h)
     gst = slu.init_gate_state(e2.slu)
     new_state: Params = {"stem_bn": ns_stem, "stages": []}
     kps, exs = [], []
     for stage in range(3):
         sp, ss = p["stages"][stage], state["stages"][stage]
         glob = stage * n
-        h, nbst, gst, kp, ex = _transition_block(
-            sp, ss, h, stage, gate_params, gst, glob, n_blocks, e2, rng,
-            train, slu_on)
+        with jax.named_scope(f"cost:s{stage}.trans"):
+            h, nbst, gst, kp, ex = _transition_block(
+                sp, ss, h, stage, gate_params, gst, glob, n_blocks, e2, rng,
+                train, slu_on)
         nss: Params = {"trans": nbst}
         kps.append(kp[None]); exs.append(ex[None])
         if n > 1:
             globs = jnp.arange(glob + 1, glob + n)
 
-            def body(carry, xs, n_blocks=n_blocks):
+            def body(carry, xs, n_blocks=n_blocks, stage=stage):
                 h, gst = carry
                 bp, bs, g = xs
-                h, nbst, gst, kp, ex = _gated_block(
-                    bp, bs, h, gate_params, gst, g, n_blocks, e2, rng,
-                    train, slu_on)
+                with jax.named_scope(f"cost:s{stage}.rest"):
+                    h, nbst, gst, kp, ex = _gated_block(
+                        bp, bs, h, gate_params, gst, g, n_blocks, e2, rng,
+                        train, slu_on)
                 return (h, gst), (nbst, kp, ex)
 
             (h, gst), (rest_ns, rest_kp, rest_ex) = lax.scan(
@@ -274,8 +281,9 @@ def resnet_fwd(p: Params, state: Params, x: jnp.ndarray, depth: int,
             kps.append(rest_kp); exs.append(rest_ex)
         new_state["stages"].append(nss)
 
-    pooled = jnp.mean(h, axis=(1, 2))
-    logits = pooled @ p["fc_w"] + p["fc_b"]
+    with jax.named_scope("cost:fc"):
+        pooled = jnp.mean(h, axis=(1, 2))
+        logits = pooled @ p["fc_w"] + p["fc_b"]
     kps_a = jnp.concatenate(kps)
     aux = {"slu_cost": jnp.mean(kps_a) if slu_on else jnp.float32(1.0),
            "slu_executed": jnp.concatenate(exs), "slu_keep_probs": kps_a}
@@ -420,29 +428,38 @@ def _depthwise(w: jnp.ndarray, x: jnp.ndarray, stride: int) -> jnp.ndarray:
 def mobilenetv2_fwd(p: Params, state: Params, x: jnp.ndarray,
                     train: bool = True) -> Tuple[jnp.ndarray, Params]:
     """Returns (logits, new running-stat state)."""
-    h, ns_stem = batchnorm(p["stem_bn"], state["stem_bn"],
-                           conv2d(p["stem"], x), train)
-    h = jax.nn.relu6(h)
+    with jax.named_scope("cost:stem"):
+        h, ns_stem = batchnorm(p["stem_bn"], state["stem_bn"],
+                               conv2d(p["stem"], x), train)
+        h = jax.nn.relu6(h)
     new_state: Params = {"stem_bn": ns_stem, "blocks": []}
-    for blk, bst, (_cin, _hid, _c, stride, residual) in zip(
-            p["blocks"], state["blocks"], _mbv2_layout()):
-        inp = h
-        y, ns1 = batchnorm(blk["bn1"], bst["bn1"],
-                           conv2d(blk["expand"], h, k=1), train)
-        y = jax.nn.relu6(y)
-        y, ns2 = batchnorm(blk["bn2"], bst["bn2"],
-                           _depthwise(blk["dw"], y, stride), train)
-        y = jax.nn.relu6(y)
-        y, ns3 = batchnorm(blk["bn3"], bst["bn3"],
-                           conv2d(blk["project"], y, k=1), train)
-        h = inp + y if residual else y
+    for i, (blk, bst, (_cin, _hid, _c, stride, residual)) in enumerate(zip(
+            p["blocks"], state["blocks"], _mbv2_layout())):
+        # nested scopes: the dw tag is innermost, so the audit walker
+        # attributes the depthwise multiply-sum separately from the
+        # block's 1x1 expand/project convs (their MAC models differ).
+        with jax.named_scope(f"cost:b{i}"):
+            inp = h
+            y, ns1 = batchnorm(blk["bn1"], bst["bn1"],
+                               conv2d(blk["expand"], h, k=1), train)
+            y = jax.nn.relu6(y)
+            with jax.named_scope(f"cost:b{i}.dw"):
+                y = _depthwise(blk["dw"], y, stride)
+            y, ns2 = batchnorm(blk["bn2"], bst["bn2"], y, train)
+            y = jax.nn.relu6(y)
+            y, ns3 = batchnorm(blk["bn3"], bst["bn3"],
+                               conv2d(blk["project"], y, k=1), train)
+            h = inp + y if residual else y
         new_state["blocks"].append({"bn1": ns1, "bn2": ns2, "bn3": ns3})
-    h, ns_head = batchnorm(p["head_bn"], state["head_bn"],
-                           conv2d(p["head"], h, k=1), train)
-    h = jax.nn.relu6(h)
+    with jax.named_scope("cost:head"):
+        h, ns_head = batchnorm(p["head_bn"], state["head_bn"],
+                               conv2d(p["head"], h, k=1), train)
+        h = jax.nn.relu6(h)
     new_state["head_bn"] = ns_head
-    pooled = jnp.mean(h, axis=(1, 2))
-    return pooled @ p["fc_w"] + p["fc_b"], new_state
+    with jax.named_scope("cost:fc"):
+        pooled = jnp.mean(h, axis=(1, 2))
+        logits = pooled @ p["fc_w"] + p["fc_b"]
+    return logits, new_state
 
 
 def mobilenetv2_loss(p: Params, state: Params, batch, rng=None,

@@ -275,7 +275,10 @@ def lm_fwd(p: Params, tokens: jnp.ndarray, cfg: ModelConfig,
     e2 = e2 or E2TrainConfig()
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     dt = cfg.act_dtype
-    x = p["embed"][tokens].astype(dt)
+    # "cost:<group>" scopes anchor the static audit's per-layer attribution
+    # (analysis/jaxpr_cost.py); groups: embed / unit (scan body) / head.
+    with jax.named_scope("cost:embed"):
+        x = p["embed"][tokens].astype(dt)
 
     memory = None
     if cfg.encoder_layers:
@@ -318,21 +321,23 @@ def lm_fwd(p: Params, tokens: jnp.ndarray, cfg: ModelConfig,
         aux = jnp.zeros((), jnp.float32)
         kps, exs = [], []
         gate_ctx = (gate_params, gst) if slu_on else None
-        for i, kind in enumerate(unit):
-            brng = jax.random.fold_in(urng, i)
-            glob = idx * len(unit) + i
-            force = jnp.logical_or(glob == 0, glob == cfg.num_layers - 1) \
-                if e2.slu.never_skip_first_last else jnp.bool_(False)
-            x, info, gate_ctx = block_apply(up[f"b{i}_{kind}"], shared, kind,
-                                            x, cfg, e2, gate_ctx, brng, force,
-                                            prefer_chunked_attn=not sp)
-            if has_cross and kind == BLOCK_ATTN:
-                cp = scanned["cross"]
-                x = x + cross_attention_fwd(cp["attn"],
-                                            apply_norm(cp["ln"], x, cfg),
-                                            memory, cfg)
-            aux = aux + info["aux"]
-            kps.append(info["kp"]); exs.append(info["ex"])
+        with jax.named_scope("cost:unit"):
+            for i, kind in enumerate(unit):
+                brng = jax.random.fold_in(urng, i)
+                glob = idx * len(unit) + i
+                force = jnp.logical_or(glob == 0, glob == cfg.num_layers - 1) \
+                    if e2.slu.never_skip_first_last else jnp.bool_(False)
+                x, info, gate_ctx = block_apply(up[f"b{i}_{kind}"], shared,
+                                                kind, x, cfg, e2, gate_ctx,
+                                                brng, force,
+                                                prefer_chunked_attn=not sp)
+                if has_cross and kind == BLOCK_ATTN:
+                    cp = scanned["cross"]
+                    x = x + cross_attention_fwd(cp["attn"],
+                                                apply_norm(cp["ln"], x, cfg),
+                                                memory, cfg)
+                aux = aux + info["aux"]
+                kps.append(info["kp"]); exs.append(info["ex"])
         gst = gate_ctx[1] if gate_ctx is not None else gst
         return (x, gst, base_rng), (aux, jnp.concatenate(kps),
                                     jnp.concatenate(exs))
@@ -351,16 +356,17 @@ def lm_fwd(p: Params, tokens: jnp.ndarray, cfg: ModelConfig,
     (x, _, _), (auxs, kps, exs) = lax.scan(
         unit_body, (x, gst0, rng), scanned)
 
-    x = apply_norm(p["final_norm"], x, cfg)
-    head = p["embed"].T if cfg.tie_embeddings else p["head"]
-    # At the LM head, switch the stream from seq-sharded (SP) back to
-    # batch-sharded and shard the *vocab* axis instead: with seq-sharded
-    # logits the head/embed gradients become full (d, V) fp32 partials per
-    # device (all-reduce); vocab-sharded logits keep them (d, V/model),
-    # reduce-scattered — multi-GiB difference at 128k vocabs.
-    x = hint(x, "batch", None, None)
-    logits = hint((x @ head.astype(dt)).astype(jnp.float32),
-                  "batch", None, "vocab")
+    with jax.named_scope("cost:head"):
+        x = apply_norm(p["final_norm"], x, cfg)
+        head = p["embed"].T if cfg.tie_embeddings else p["head"]
+        # At the LM head, switch the stream from seq-sharded (SP) back to
+        # batch-sharded and shard the *vocab* axis instead: with seq-sharded
+        # logits the head/embed gradients become full (d, V) fp32 partials
+        # per device (all-reduce); vocab-sharded logits keep them
+        # (d, V/model), reduce-scattered — multi-GiB at 128k vocabs.
+        x = hint(x, "batch", None, None)
+        logits = hint((x @ head.astype(dt)).astype(jnp.float32),
+                      "batch", None, "vocab")
     if cfg.padded_vocab != cfg.vocab_size:   # mask pad ids (never predicted)
         pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
         logits = jnp.where(pad_mask[None, None, :], logits, -1e30)

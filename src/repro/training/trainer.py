@@ -296,15 +296,19 @@ class Trainer:
                 if "psg_fallback_ratio" in h]
         return float(np.mean(vals)) if vals else None
 
-    def energy_report(self, steps: Optional[int] = None):
+    def energy_report(self, steps: Optional[int] = None,
+                      validate_against_hlo: bool = False):
         """The run's :class:`~repro.core.ledger.EnergyReport`: this run's
         telemetry (SMD executed/dropped counts, SLU execution ratios, PSG
         fallback-tile ratios) composed with the experiment's per-layer cost
         model and the 45nm per-op tables — measured next to assumed
         (DESIGN.md §Energy).  ``steps`` defaults to the config's nominal
-        ``total_steps`` budget."""
+        ``total_steps`` budget; ``validate_against_hlo`` additionally runs
+        the static cost audit (``analysis/audit.py``, cached per config)
+        and stamps its verdict into ``validated_against_hlo``."""
         from repro.core.ledger import EnergyLedger
-        return EnergyLedger.from_trainer(self).report(steps=steps)
+        return EnergyLedger.from_trainer(self).report(
+            steps=steps, validate_against_hlo=validate_against_hlo)
 
     def _save(self, step: int):
         from repro.ft.checkpoint import save_checkpoint

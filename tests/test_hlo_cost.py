@@ -48,7 +48,42 @@ def test_synthetic_while_trip_and_dot_flops():
 
 def test_trip_count_uses_compare_constant():
     comps = H.split_computations(SYNTH)
-    assert H._trip_count(comps["cond"]) == 10
+    assert H._trip_count(comps["cond"]) == (10, True)
+    t = H.analyze(SYNTH)
+    assert t["unknown_trip_count"] == 0
+
+
+def test_unknown_trip_count_flagged_not_silent():
+    """A while whose condition exposes no compare constant must be counted
+    once AND surfaced in the totals, never silently trusted."""
+    hlo = """
+%cond (arg: (pred[], f32[8,16])) -> pred[] {
+  %arg = (pred[], f32[8,16]) parameter(0)
+  ROOT %p = pred[] get-tuple-element(%arg), index=0
+}
+
+%body (arg2: (pred[], f32[8,16])) -> (pred[], f32[8,16]) {
+  %arg2 = (pred[], f32[8,16]) parameter(0)
+  %p = pred[] get-tuple-element(%arg2), index=0
+  %x = f32[8,16] get-tuple-element(%arg2), index=1
+  %w = f32[16,16] constant(0)
+  %y = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (pred[], f32[8,16]) tuple(%p, %y)
+}
+
+ENTRY %main (p0: f32[8,16], c0: pred[]) -> f32[8,16] {
+  %p0 = f32[8,16] parameter(0)
+  %c0 = pred[] parameter(1)
+  %init = (pred[], f32[8,16]) tuple(%c0, %p0)
+  %w = (pred[], f32[8,16]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,16] get-tuple-element(%w), index=1
+}
+"""
+    comps = H.split_computations(hlo)
+    trips, known = H._trip_count(comps["cond"])
+    assert trips == 1 and not known
+    t = H.analyze(hlo)
+    assert t["unknown_trip_count"] == 1
 
 
 def test_real_scan_flops_close_to_analytic():

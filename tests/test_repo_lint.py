@@ -1,0 +1,44 @@
+"""Repo convention linter (analysis/repo_lint.py): pallas_call containment
+and REPRO_* env-read containment over src/repro."""
+from repro.analysis import lint_repo
+from repro.analysis.repo_lint import lint_source
+
+
+def test_repo_is_clean():
+    findings = lint_repo()
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_pallas_call_outside_kernels_is_flagged():
+    src = "from jax.experimental import pallas as pl\n" \
+          "y = pl.pallas_call(f, grid=(1,))(x)\n"
+    (f,) = lint_source(src, "repro/models/sneaky.py")
+    assert f.rule == "pallas-outside-kernels" and f.line == 2
+
+
+def test_pallas_call_inside_kernels_is_allowed():
+    src = "from jax.experimental import pallas as pl\n" \
+          "y = pl.pallas_call(f, grid=(1,))(x)\n"
+    assert lint_source(src, "repro/kernels/new_kernel.py") == []
+
+
+def test_env_reads_are_flagged_everywhere():
+    for src in ('import os\nv = os.environ.get("REPRO_FOO")\n',
+                'import os\nv = os.getenv("REPRO_FOO", "x")\n',
+                'import os\nv = os.environ["REPRO_FOO"]\n'):
+        findings = lint_source(src, "repro/training/trainer.py")
+        assert [f.rule for f in findings] == ["env-read"], src
+
+
+def test_sanctioned_dispatch_read_is_allowed():
+    src = 'import os\nv = os.environ.get("REPRO_KERNEL_BACKEND", "")\n'
+    assert lint_source(src, "repro/kernels/dispatch.py") == []
+    # ... but only in dispatch.py
+    assert lint_source(src, "repro/kernels/ops.py") != []
+
+
+def test_non_repro_env_and_mentions_are_not_flagged():
+    src = ('import os\n'
+           'v = os.environ.get("XLA_FLAGS")\n'
+           's = "REPRO_KERNEL_BACKEND"  # naming it is fine\n')
+    assert lint_source(src, "repro/launch/mesh.py") == []
