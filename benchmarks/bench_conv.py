@@ -7,33 +7,43 @@ Two quantities per convolution site of the paper's CIFAR ResNet:
   time on the CPU Pallas interpreter is not TPU-representative, but the
   operand lifecycle each path streams through HBM is a property of the
   dispatch/BlockSpec structure and is computed exactly below;
-* **wall time** of a jitted forward+weight-grad on both paths (recorded
+* **wall time** of a jitted forward+backward on both paths (recorded
   for the CPU trend only, clearly labeled as interpreter numbers).
 
-What the byte accounting counts (x-side activation traffic only — the
-output-gradient and output tensors move identically on both paths and are
-excluded from both sides):
+The byte accounting covers the WHOLE conv step per path, split into
+three named components (``assert_complete`` enforces that every path
+reports all of them and that the totals reconcile — ``run.py
+--json-conv`` exits nonzero otherwise):
 
-im2col path (``models/resnet.conv2d`` default, N = B*H'*W', din = k*k*C):
-  forward   reads the input once, then WRITES the (N, din) fp32 patch
-            tensor and reads it back for the GEMM;
-  backward  re-reads the saved patch tensor twice to build the MSB/full
-            quantization code grids, writes both int8 code copies, and the
-            kernel passes read the codes three times (predictor pass: msb;
-            gated pass: msb + full).
+``fwd_x``   forward x-side traffic.  im2col reads the input, then WRITES
+            the (N, k*k*C) fp32 patch tensor and reads it back for the
+            GEMM; fused reads the padded input once per dout tile
+            (n_j = ceil(dout / BN)) — no patch tensor exists.
+``bwd_x``   weight-gradient-side traffic.  Both paths re-read their
+            kernel operand twice to build the MSB/full quantization code
+            grids, write both int8 code copies, and the PSG kernel
+            passes read the codes three times (predictor: msb; gated:
+            msb + full) — per dout tile on the fused path.
+``bwd_dx``  input-gradient-side traffic.  im2col writes the fp32
+            dpatches cotangent from the GEMM vjp, re-reads it, and
+            scatter-folds it into dx; the fused path's implicit
+            transposed-conv kernel (``kernels/conv.conv_grad_x_pallas``)
+            reads gy once across the dout-tile grid and writes each dx
+            block exactly once — no dpatches tensor, no k² scatter
+            passes.  The DEMOTED per-tap col2im loop the kernel replaced
+            (k² read-modify-write sweeps over dx windows) is recorded as
+            ``bwd_dx_col2im_demoted`` for the trajectory but excluded
+            from the fused total.
 
-fused path (``kernels/conv.py``, Xp = B*Hp*Wp*C padded-input elements):
-  forward   reads the padded input once per dout tile (n_j = ceil(dout /
-            BN)); no patch tensor exists;
-  backward  reads the padded input twice for code building, writes both
-            int8 code copies, and the two kernel passes read the codes
-            once per dout tile each (predictor: msb; gated: msb + full).
-
-For a 3x3 conv the patch tensor is a ~9x copy of the input, so the ratio
-lands around an order of magnitude; ``conv_json`` records the per-step
-totals over every conv site of the paper-shaped ResNet-74 batch-128
-config (``BENCH_conv.json``, uploaded by CI next to the other BENCH
-artifacts).
+Weights and the forward output move identically on both paths and are
+excluded from both sides; gy is charged only where the paths differ (the
+dx component).  For a 3x3 conv the patch tensor is a ~9x copy of the
+input, so the per-direction ratios land around an order of magnitude;
+``conv_json`` records the per-step totals over every conv site of the
+paper-shaped ResNet-74 batch-128 config (``BENCH_conv.json``, uploaded
+by CI next to the other BENCH artifacts).  The acceptance quantity is
+``backward_bytes_ratio`` — the whole-backward (bwd_x + bwd_dx) im2col /
+fused ratio.
 """
 from __future__ import annotations
 
@@ -45,10 +55,33 @@ from repro.kernels.conv import DEFAULT_BN
 FP32 = 4
 INT8 = 1
 
+#: every path's accounting must report exactly these traffic components
+#: (plus optional informational extras prefixed with the component name).
+REQUIRED_COMPONENTS = ("fwd_x", "bwd_x", "bwd_dx")
+
+
+class IncompleteAccountingError(RuntimeError):
+    """A conv path's byte accounting is missing a traffic direction."""
+
+
+def assert_complete(acct: Dict[str, int], path: str) -> None:
+    """Fail loudly if ``acct`` omits a traffic direction or its total
+    does not reconcile with the components (run.py --json-conv gate)."""
+    missing = [c for c in REQUIRED_COMPONENTS if not acct.get(c, 0) > 0]
+    if missing:
+        raise IncompleteAccountingError(
+            f"{path}: byte accounting incomplete — missing/zero "
+            f"components {missing} (have {sorted(acct)})")
+    if acct.get("total") != sum(acct[c] for c in REQUIRED_COMPONENTS):
+        raise IncompleteAccountingError(
+            f"{path}: total {acct.get('total')} != sum of "
+            f"{REQUIRED_COMPONENTS}")
+
 
 def _geom(shape):
     """Per-path operand extents of a conv site: (patch elems, kernel-operand
-    elems, full-input elems, pre-subsample elems or 0, dout tiles).
+    elems, full-input elems, pre-subsample elems or 0, dout tiles, gy
+    elems, per-tap window elems).
 
     For ``k >= stride`` the kernel operand is the padded input.  For
     ``k < stride`` (the 1x1 stride-2 projection shortcut) both paths
@@ -70,30 +103,57 @@ def _geom(shape):
     patch_elems = (shape.batch * shape.hw_out * shape.hw_out *
                    shape.k * shape.k * shape.cin)
     n_j = -(-shape.cout // DEFAULT_BN)        # the kernel's dout tile count
-    return patch_elems, xp_elems, full_elems, sub_elems, n_j
+    g_elems = shape.batch * shape.hw_out * shape.hw_out * shape.cout
+    win_elems = shape.batch * shape.hw_out * shape.hw_out * shape.cin
+    return patch_elems, xp_elems, full_elems, sub_elems, n_j, g_elems, win_elems
 
 
-def im2col_activation_bytes(shape) -> int:
-    """x-side HBM traffic of one fwd+bwd on the materialized path."""
-    patch_elems, xp_elems, full_elems, sub_elems, _ = _geom(shape)
-    src_elems = full_elems if sub_elems else xp_elems     # what the builder reads
-    fwd = (src_elems * FP32                               # patch builder reads x
-           + 2 * patch_elems * FP32)                      # write+read patches
-    bwd = (2 * patch_elems * FP32                         # re-read for code build
-           + 2 * patch_elems * INT8                       # write msb+full codes
-           + 3 * patch_elems * INT8)                      # kernel passes read codes
-    return fwd + bwd
+def im2col_bytes(shape) -> Dict[str, int]:
+    """Whole-step HBM traffic of the materialized path, per component."""
+    patch, xp, full, sub, _, g, _ = _geom(shape)
+    src = full if sub else xp                             # what the builder reads
+    fwd_x = (src * FP32                                   # patch builder reads x
+             + 2 * patch * FP32)                          # write+read patches
+    bwd_x = (2 * patch * FP32                             # re-read for code build
+             + 2 * patch * INT8                           # write msb+full codes
+             + 3 * patch * INT8)                          # kernel passes read codes
+    bwd_dx = (g * FP32                                    # GEMM vjp reads gy
+              + 2 * patch * FP32                          # write+read dpatches
+              + xp * FP32)                                # col2im fold writes dx
+    return {"fwd_x": fwd_x, "bwd_x": bwd_x, "bwd_dx": bwd_dx,
+            "total": fwd_x + bwd_x + bwd_dx}
 
 
-def fused_activation_bytes(shape) -> int:
-    """x-side HBM traffic of one fwd+bwd on the implicit-GEMM path."""
-    _, xp_elems, full_elems, sub_elems, n_j = _geom(shape)
-    sub = (full_elems + sub_elems) * FP32 if sub_elems else 0  # build subsample
-    fwd = sub + n_j * xp_elems * FP32                     # operand, per dout tile
-    bwd = (2 * xp_elems * FP32                            # read for code build
-           + 2 * xp_elems * INT8                          # write msb+full codes
-           + 3 * n_j * xp_elems * INT8)                   # kernel passes read codes
-    return fwd + bwd
+def fused_bytes(shape) -> Dict[str, int]:
+    """Whole-step HBM traffic of the implicit-GEMM path, per component.
+
+    ``bwd_dx_col2im_demoted`` is what the per-tap scatter loop the
+    implicit dx kernel replaced would have paid (k² sweeps, each reading
+    gy and read-modify-writing a dx window) — informational only, not in
+    ``total``.
+    """
+    _, xp, full, sub, n_j, g, win = _geom(shape)
+    k2 = shape.k * shape.k
+    build = (full + sub) * FP32 if sub else 0             # build subsample
+    fwd_x = build + n_j * xp * FP32                       # operand, per dout tile
+    bwd_x = (2 * xp * FP32                                # read for code build
+             + 2 * xp * INT8                              # write msb+full codes
+             + 3 * n_j * xp * INT8)                       # kernel passes read codes
+    bwd_dx = (n_j * g * FP32                              # gy read once per tile grid
+              + xp * FP32)                                # each dx block written once
+    demoted = (k2 * (g + 3 * win) * FP32                  # per-tap: gy + rmw window
+               + xp * FP32)                               # zero-init dx
+    return {"fwd_x": fwd_x, "bwd_x": bwd_x, "bwd_dx": bwd_dx,
+            "total": fwd_x + bwd_x + bwd_dx,
+            "bwd_dx_col2im_demoted": demoted}
+
+
+def _ratios(b_im2col: Dict[str, int], b_fused: Dict[str, int]) -> Dict:
+    bwd_i = b_im2col["bwd_x"] + b_im2col["bwd_dx"]
+    bwd_f = b_fused["bwd_x"] + b_fused["bwd_dx"]
+    return {"bytes_ratio": b_im2col["total"] / b_fused["total"],
+            "backward_bytes_ratio": bwd_i / bwd_f,
+            "dx_bytes_ratio": b_im2col["bwd_dx"] / b_fused["bwd_dx"]}
 
 
 def _shape_rows(fast: bool) -> List[Dict]:
@@ -106,7 +166,7 @@ def _shape_rows(fast: bool) -> List[Dict]:
     from repro.core.config import PSGConfig
     from repro.kernels.ref import conv_patches_ref
 
-    cfg = PSGConfig(enabled=True)
+    cfg = PSGConfig(enabled=True, fused_conv=False)
     cfg_fused = PSGConfig(enabled=True, fused_conv=True)
     batch = 2 if fast else 8
     convs = resnet_conv_shapes(depth=74, width=16, batch=batch)
@@ -136,35 +196,47 @@ def _shape_rows(fast: bool) -> List[Dict]:
                 y = psg.conv2d(x_, w_, k=k, stride=s)
             return jnp.sum(y * gy)
 
-        us_im2col, _ = _time(jax.jit(jax.grad(im2col_loss)), w, x)
-        us_fused, _ = _time(jax.jit(jax.grad(fused_loss)), w, x)
-        b_im2col = im2col_activation_bytes(c)
-        b_fused = fused_activation_bytes(c)
+        # grad over BOTH operands: the timed program includes the dx side
+        us_im2col, _ = _time(jax.jit(jax.grad(im2col_loss, argnums=(0, 1))),
+                             w, x)
+        us_fused, _ = _time(jax.jit(jax.grad(fused_loss, argnums=(0, 1))),
+                            w, x)
+        b_im2col = im2col_bytes(c)
+        b_fused = fused_bytes(c)
+        assert_complete(b_im2col, f"im2col/{c.kind}")
+        assert_complete(b_fused, f"fused/{c.kind}")
         rows.append({
             "batch": c.batch, "hw": c.hw, "cin": c.cin, "cout": c.cout,
             "k": k, "stride": s, "kind": c.kind,
             "us_im2col_cpu_interpret": us_im2col,
             "us_fused_cpu_interpret": us_fused,
-            "im2col_activation_bytes": b_im2col,
-            "fused_activation_bytes": b_fused,
-            "bytes_ratio": b_im2col / b_fused,
+            "im2col_bytes": b_im2col,
+            "fused_bytes": b_fused,
+            **_ratios(b_im2col, b_fused),
         })
     return rows
 
 
 def _paper_totals(depth: int = 74, width: int = 16, batch: int = 128) -> Dict:
     """Per-training-step activation-byte totals over EVERY conv site (with
-    multiplicity) of the paper-shaped config — the acceptance quantity."""
+    multiplicity) of the paper-shaped config — the acceptance quantity is
+    ``backward_bytes_ratio`` (whole-backward: bwd_x + bwd_dx)."""
     from repro.configs.paper_cnns import resnet_conv_shapes
     sites = resnet_conv_shapes(depth=depth, width=width, batch=batch,
                                unique=False)
-    b_im2col = sum(im2col_activation_bytes(c) for c in sites)
-    b_fused = sum(fused_activation_bytes(c) for c in sites)
+    b_im2col: Dict[str, int] = {c: 0 for c in (*REQUIRED_COMPONENTS, "total")}
+    b_fused: Dict[str, int] = dict(b_im2col, bwd_dx_col2im_demoted=0)
+    for c in sites:
+        for acc, fn in ((b_im2col, im2col_bytes), (b_fused, fused_bytes)):
+            for comp, v in fn(c).items():
+                acc[comp] += v
+    assert_complete(b_im2col, "im2col/paper_totals")
+    assert_complete(b_fused, "fused/paper_totals")
     return {"depth": depth, "width": width, "batch": batch,
             "conv_sites": len(sites),
-            "im2col_activation_bytes_per_step": b_im2col,
-            "fused_activation_bytes_per_step": b_fused,
-            "bytes_ratio": b_im2col / b_fused}
+            "im2col_bytes_per_step": b_im2col,
+            "fused_bytes_per_step": b_fused,
+            **_ratios(b_im2col, b_fused)}
 
 
 def _train_proxy(fast: bool) -> Dict:
@@ -186,8 +258,8 @@ def _train_proxy(fast: bool) -> Dict:
     mk = lambda s, sh: make_image_batch(task, 0, s, sh, batch)
     out: Dict = {"depth": depth, "width": width, "batch": batch,
                  "steps": steps,
-                 "note": "CPU Pallas-interpreter proxy; bytes_ratio is the "
-                         "quantity of record"}
+                 "note": "CPU Pallas-interpreter proxy; the byte ratios are "
+                         "the quantity of record"}
     for label, fused in (("im2col", False), ("fused", True)):
         exp = Experiment(
             model=cnn_model(f"resnet{depth}", depth, width=width),
@@ -207,7 +279,9 @@ def _train_proxy(fast: bool) -> Dict:
 
 
 def conv_json(fast: bool = True) -> dict:
-    """The BENCH_conv.json record (CI artifact)."""
+    """The BENCH_conv.json record (CI artifact).  Raises
+    :class:`IncompleteAccountingError` if any path omits a traffic
+    direction — run.py --json-conv turns that into a nonzero exit."""
     return {"paper_resnet74_batch128": _paper_totals(),
             "shapes": _shape_rows(fast),
             "train_proxy_cpu_interpret": _train_proxy(fast)}
@@ -219,12 +293,14 @@ def run(fast: bool = True):
     totals = _paper_totals()
     yield csv_row("conv/paper_resnet74_batch128", 0.0,
                   f"bytes_ratio={totals['bytes_ratio']:.2f};"
-                  f"im2col_GB={totals['im2col_activation_bytes_per_step']/1e9:.2f};"
-                  f"fused_GB={totals['fused_activation_bytes_per_step']/1e9:.2f}")
+                  f"backward_bytes_ratio={totals['backward_bytes_ratio']:.2f};"
+                  f"im2col_GB={totals['im2col_bytes_per_step']['total']/1e9:.2f};"
+                  f"fused_GB={totals['fused_bytes_per_step']['total']/1e9:.2f}")
     for r in _shape_rows(fast):
         yield csv_row(
             f"conv/{r['kind']}/{r['batch']}x{r['hw']}x{r['cin']}-"
             f"{r['cout']}k{r['k']}s{r['stride']}",
             r["us_fused_cpu_interpret"],
             f"im2col_us={r['us_im2col_cpu_interpret']:.1f};"
-            f"bytes_ratio={r['bytes_ratio']:.2f}")
+            f"bytes_ratio={r['bytes_ratio']:.2f};"
+            f"backward_bytes_ratio={r['backward_bytes_ratio']:.2f}")

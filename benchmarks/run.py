@@ -17,6 +17,8 @@ chunked loop and the chunk speedup on the depth-14 ResNet CPU configs
 fused-conv trajectory: implicit-GEMM vs materialized-im2col activation
 bytes moved per training step on the paper-shaped ResNet-74 config plus
 per-shape rows and a CPU proxy steps/s A/B (benchmarks/bench_conv.py).
+Both traffic directions (fwd/bwd x-side AND the dx side) are counted per
+path; exits nonzero if any path's byte accounting is incomplete.
 
 ``--json-audit [PATH]`` (default ``BENCH_audit.json``) records the static
 cost audit: per-layer CostModel vs jaxpr vs compiled-HLO reconciliation
@@ -122,9 +124,16 @@ def main(argv=None) -> None:
                 json.dump(throughput_json(fast=fast), f, indent=2)
             print(f"wrote {args.json_throughput}", file=sys.stderr)
         if args.json_conv:
-            from benchmarks.bench_conv import conv_json
+            from benchmarks.bench_conv import (IncompleteAccountingError,
+                                               conv_json)
+            try:
+                record = conv_json(fast=fast)
+            except IncompleteAccountingError as e:
+                print(f"conv byte accounting incomplete: {e}",
+                      file=sys.stderr)
+                sys.exit(1)
             with open(args.json_conv, "w") as f:
-                json.dump(conv_json(fast=fast), f, indent=2)
+                json.dump(record, f, indent=2)
             print(f"wrote {args.json_conv}", file=sys.stderr)
         if args.json_audit:
             from benchmarks.bench_audit import audit_json

@@ -252,12 +252,15 @@ class PSGConfig:
     # the retired REPRO_PSG_INT8_GATHER trace-time env read).
     int8_gather: bool = False
     # Route CNN convolutions through the fused implicit-GEMM Pallas kernels
-    # (kernels/conv.py): the k x k patch gather happens inside the kernel
-    # instead of materializing the im2col operand in HBM (DESIGN.md
-    # §Kernels).  Default off: the im2col + psg.matmul path stays the
-    # reference; flip per-experiment (the frozen config is a static jit
-    # argument, so the selection is jit-cache-correct).
-    fused_conv: bool = False
+    # (kernels/conv.py): forward, PSG weight gradient AND the input
+    # gradient run in-kernel; no conv path materializes a patch tensor in
+    # either direction (DESIGN.md §Kernels).  None (the default) = auto:
+    # fused on the reference/interpret backends, materialized im2col on
+    # Mosaic (opt-in pending a real-TPU profile — ROADMAP "Finish the
+    # Pallas kernel story").  Explicit True/False pins it per-experiment
+    # (the frozen config is a static jit argument, so the selection is
+    # jit-cache-correct); resolution lives in core/psg.fused_conv_active.
+    fused_conv: Optional[bool] = None
 
 
 @dataclass(frozen=True)

@@ -196,18 +196,15 @@ def _psg_conv2d_bwd(k, stride, cfg, res, gy):
     ho, wo = gy.shape[1], gy.shape[2]
     gq = quantize(gy, cfg.bits_g)
     wq = quantize(w, cfg.bits_x)
-    # input gradient: per-tap col2im scatter-add — each tap's (B*Ho*Wo, C)
-    # contribution is computed and scattered directly; the full (N, k*k*C)
-    # dpatches tensor of the im2col backward is never formed.
-    from repro.kernels.conv import to_tap_major
-    wt = to_tap_major(wq, k, C).astype(gq.dtype)
-    g2 = gq.reshape(-1, dout)
-    dxp = jnp.zeros(xp.shape, gq.dtype)
-    for t in range(k * k):
-        ki, kj = t // k, t % k
-        g_t = (g2 @ wt[t * C:(t + 1) * C, :].T).reshape(B, ho, wo, C)
-        dxp = dxp.at[:, ki:ki + (ho - 1) * stride + 1:stride,
-                     kj:kj + (wo - 1) * stride + 1:stride, :].add(g_t)
+    # input gradient: implicit transposed-conv kernel via the dispatch
+    # layer — gy windows and tap-major weight slices are gathered inside
+    # the kernel (dilated-window indexing for stride > 1), dx accumulates
+    # in an f32 VMEM tile and each block is written exactly once.  The
+    # old per-tap col2im scatter-add loop (k^2 strided HBM
+    # read-modify-write passes) is demoted to kernels/ref.py and serves
+    # as the reference-backend anchor; both accumulate in float32.
+    dxp = dispatch.conv_grad_x(gq, wq, cfg, k=k, stride=stride,
+                               hp=Hp, wp=Wp)
     # weight gradient: tile-level Eq. (2) with the patch gather inside the
     # kernel's reduction loop (dispatch: Pallas interpret on CPU, Mosaic on
     # TPU, element-level oracle when pinned to the reference backend).
@@ -219,6 +216,21 @@ def _psg_conv2d_bwd(k, stride, cfg, res, gy):
 
 
 _psg_conv2d.defvjp(_psg_conv2d_fwd, _psg_conv2d_bwd)
+
+
+def fused_conv_active(cfg: Optional[PSGConfig]) -> bool:
+    """Resolve a config's ``fused_conv`` selection at trace time.
+
+    Explicit ``True``/``False`` wins; the default (``None`` = auto) runs
+    the fused implicit-GEMM path on the reference/interpret backends and
+    keeps the materialized im2col path on Mosaic, which stays opt-in
+    pending a real-TPU profile (ROADMAP "Finish the Pallas kernel story").
+    """
+    if cfg is None:
+        return False
+    if cfg.fused_conv is not None:
+        return cfg.fused_conv
+    return dispatch.resolve_backend(cfg) != dispatch.BACKEND_MOSAIC
 
 
 def conv2d(x: jnp.ndarray, w: jnp.ndarray, *, k: int = 3,

@@ -37,10 +37,27 @@ the measured energy-accounting stats that flow through the probe cotangent
 into ``psg_fallback_ratio`` (DESIGN.md §Dispatch), exactly like the matmul
 kernel's.
 
+Input gradient (``conv_grad_x_pallas``): the implicit *transposed* conv —
+the exact transpose of the forward's unrolled tap loop.  Grid ``(B,
+dout/BN)`` with the dout (reduction) axis innermost; each step gathers the
+contributing ``gy`` windows per filter tap from the VMEM-resident
+output-grad block and contracts them against the tap's ``(C, BN)`` weight
+slice.  Stride-2 is handled by *dilated-window indexing*: dx is
+decomposed into its ``stride x stride`` spatial phases, each phase a
+stride-1 window-gather conv over the (in-VMEM zero-padded) ``gy`` block —
+no dilated gy tensor, no col2im scatter.  The phase results interleave
+back via a pure stack+reshape, accumulate in an f32 VMEM tile across dout
+tiles, and each dx block is written exactly once on the last reduction
+step — versus the demoted col2im reference (``ref.conv_grad_x_ref``)
+whose k^2 strided ``.at[].add`` passes read-modify-write a full-size HBM
+accumulator once per tap.
+
 VMEM budget: one image block ``Hp*Wp*C`` + two ``(k*k*C, BN)``
 accumulators.  For every CIFAR ResNet / MobileNetV2 shape this is well
 under 1 MB (worst: stage-0 ResNet ``34*34*16`` input + ``144x128`` accs);
 the MobileNetV2 1x1 head (``C=320``) peaks at ~0.5 MB of accumulator.
+The dx kernel carries one ``(Hp*Wp, C)`` f32 accumulator (74 KB at the
+stage-0 worst case) next to its ``(Ho, Wo, BN)`` gy block.
 Non-128-multiple ``dout`` is padded to the clamped ``BN`` tile and cropped
 on return; padded columns accumulate zeros and (like ``psg_matmul``'s
 padding caveat) count as fallback work in the stats — the ratio reports
@@ -103,6 +120,59 @@ def _conv_fwd_kernel(x_ref, w_ref, o_ref, *, k: int, stride: int,
                             w_ref[t * c:(t + 1) * c, :].astype(jnp.float32),
                             preferred_element_type=jnp.float32)
     o_ref[0] = acc.reshape(ho, wo, -1).astype(o_ref.dtype)
+
+
+def _conv_grad_x_kernel(g_ref, w_ref, o_ref, acc, *, k: int, stride: int,
+                        hp: int, wp: int, ho: int, wo: int, n_j: int):
+    """One (image, dout-tile) step of the implicit transposed conv.
+
+    Transpose of the forward tap loop: ``dx[p, q] = sum_t gy[(p-ki)/s,
+    (q-kj)/s] @ w_t^T`` over taps where the division is exact.  dx is
+    decomposed into ``s x s`` spatial phases ``(pi, pj)``; within a phase
+    only taps with ``ki = pi (mod s)`` contribute and the gather becomes a
+    *stride-1* shifted window of the zero-padded gy block — dilated-window
+    indexing instead of the col2im scatter.  The dout axis is the
+    reduction axis: partials accumulate in the f32 ``acc`` tile and the dx
+    block is written exactly once, on the last dout tile.
+    """
+    s = stride
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    g = g_ref[0].astype(jnp.float32)                    # (ho, wo, bn)
+    bn = g.shape[-1]
+    c = acc.shape[-1]
+    nu, nv = -(-hp // s), -(-wp // s)                   # phase lattice extent
+    a_max = (k - 1) // s                                # max tap phase offset
+    # pad so every shifted (nu, nv) window gather is in range: rows u - a
+    # for u in [0, nu), a in [0, a_max] span [-a_max, nu - 1]
+    gp = jnp.pad(g, ((a_max, nu - ho), (a_max, nv - wo), (0, 0)))
+    phase_rows = []
+    for pi in range(s):
+        prow = []
+        for pj in range(s):
+            part = jnp.zeros((nu * nv, c), jnp.float32)
+            for a in range(-(-(k - pi) // s)):          # ki = pi + s*a < k
+                for b in range(-(-(k - pj) // s)):
+                    t = (pi + s * a) * k + (pj + s * b)
+                    win = lax.slice(gp, (a_max - a, a_max - b, 0),
+                                    (a_max - a + nu, a_max - b + nv, bn))
+                    part = part + jnp.dot(
+                        win.reshape(nu * nv, bn),
+                        w_ref[t * c:(t + 1) * c, :].astype(jnp.float32).T,
+                        preferred_element_type=jnp.float32)
+            prow.append(part.reshape(nu, nv, c))
+        phase_rows.append(jnp.stack(prow, axis=2))      # (nu, nv, s, c)
+    full = jnp.stack(phase_rows, axis=1)                # (nu, s, nv, s, c)
+    full = full.reshape(nu * s, nv * s, c)[:hp, :wp, :]
+    acc[...] += full.reshape(hp * wp, c)
+
+    @pl.when(j == n_j - 1)
+    def _finish():
+        o_ref[0] = acc[...].reshape(hp, wp, c).astype(o_ref.dtype)
 
 
 def _conv_pred_kernel(xm_ref, gm_ref, out_ref, acc, *, k: int, stride: int,
@@ -199,6 +269,40 @@ def conv_fwd_pallas(xp: jnp.ndarray, w: jnp.ndarray, *, k: int, stride: int,
         interpret=interpret,
     )(xp, wt)
     return y[..., :dout]
+
+
+def conv_grad_x_pallas(gq: jnp.ndarray, wq: jnp.ndarray, *, k: int,
+                       stride: int, hp: int, wp: int, bn: int = DEFAULT_BN,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Implicit transposed-conv input gradient.
+
+    ``gq``: quantized output-gradient ``(B, Ho, Wo, dout)``; ``wq``:
+    patch-major ``(k*k*C, dout)`` quantized weight; ``hp``/``wp``: the
+    pre-padded input extent the forward consumed.  Returns ``dx (B, hp,
+    wp, C)`` accumulated in float32 — value-equal to the col2im reference
+    (``ref.conv_grad_x_ref``) up to fp32 tap-summation order, with no
+    dpatches tensor and no k^2 HBM read-modify-write scatter passes: gy is
+    read once, dx is written once.
+    """
+    B, ho, wo, dout = gq.shape
+    C = wq.shape[0] // (k * k)
+    bn_ = min(bn, dout)
+    wt = _pad_dout(to_tap_major(wq, k, C), bn_)
+    gp = _pad_dout(gq, bn_)
+    n_j = gp.shape[-1] // bn_
+    return pl.pallas_call(
+        functools.partial(_conv_grad_x_kernel, k=k, stride=stride,
+                          hp=hp, wp=wp, ho=ho, wo=wo, n_j=n_j),
+        grid=(B, n_j),
+        in_specs=[
+            pl.BlockSpec((1, ho, wo, bn_), lambda b, j: (b, 0, 0, j)),
+            pl.BlockSpec((k * k * C, bn_), lambda b, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, hp, wp, C), lambda b, j: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, hp, wp, C), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hp * wp, C), jnp.float32)],
+        interpret=interpret,
+    )(gp, wt)
 
 
 def conv_grad_w_predictor_pallas(xm: jnp.ndarray, gm: jnp.ndarray,

@@ -167,6 +167,27 @@ def conv_fwd(xq: jnp.ndarray, wq: jnp.ndarray, cfg: Optional[PSGConfig],
                         interpret=backend != BACKEND_MOSAIC)
 
 
+def conv_grad_x(gq: jnp.ndarray, wq: jnp.ndarray,
+                cfg: Optional[PSGConfig], *, k: int, stride: int,
+                hp: int, wp: int) -> jnp.ndarray:
+    """Conv input gradient on pre-quantized operands (``dx``).
+
+    Implicit transposed-conv Pallas kernel (``kernels/conv.py``) on the
+    interpret/mosaic backends — gy windows and tap-major weight slices are
+    gathered inside the kernel, dx accumulates in an f32 VMEM tile and is
+    written once; per-tap col2im scatter-add loop (f32 accumulation) on
+    the reference backend, the demoted semantics anchor.  Value-equal up
+    to fp32 tap-summation order.
+    """
+    backend = resolve_backend(cfg)
+    gf = gq.astype(jnp.float32)
+    wf = wq.astype(jnp.float32)
+    if backend == BACKEND_REFERENCE:
+        return ref.conv_grad_x_ref(gf, wf, k, stride, hp, wp)
+    return ops.conv_grad_x(gf, wf, k, stride, hp, wp,
+                           interpret=backend != BACKEND_MOSAIC)
+
+
 def conv_grad_w(xp: jnp.ndarray, gy: jnp.ndarray, cfg: PSGConfig,
                 *, k: int, stride: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """PSG conv weight-gradient sign + measured fallback ratio.
@@ -192,16 +213,46 @@ def conv_grad_w(xp: jnp.ndarray, gy: jnp.ndarray, cfg: PSGConfig,
 # ---------------------------------------------------------------------------
 
 
+def conv_lint_geometries() -> Dict[str, Tuple[int, int, int, int, int]]:
+    """Kernel-facing conv geometries the linter must cover, one per conv
+    *kind* that actually ships: ``kind -> (k, stride, hw, cin, cout)``.
+
+    Derived from ``configs/paper_cnns.resnet_conv_shapes`` (deepest-stage
+    representative of each kind, ``psg.conv2d``'s ``k < stride``
+    pre-subsample normalization applied — the kernels never see
+    ``k < stride``), plus the MobileNetV2-style ``point`` 1x1 with a
+    non-128-multiple ``dout`` so the padded dout tile is linted too.
+    ``cout`` is widened to 256 so the dout axis tiles (grid > 1) — a
+    coverage or accumulator bug cannot hide behind a degenerate grid.
+    """
+    from repro.configs.paper_cnns import resnet_conv_shapes
+
+    by_kind = {}
+    for c in resnet_conv_shapes(depth=14, width=16, batch=4):
+        by_kind[c.kind] = c                 # last occurrence: deepest stage
+    geoms: Dict[str, Tuple[int, int, int, int, int]] = {}
+    for kind, c in sorted(by_kind.items()):
+        k, s, hw = c.k, c.stride, c.hw
+        if k < s:                           # 1x1 downsample: pre-subsampled
+            hw, s = -(-hw // s), 1
+        geoms[kind] = (k, s, hw, c.cin, 256)
+    geoms["point"] = (1, 1, 4, 40, 200)     # padded dout tile (n_j = 2)
+    return geoms
+
+
 def shipped_kernels() -> Dict[str, Tuple[Callable, tuple]]:
-    """Every Pallas kernel this repo ships, with a representative abstract
-    instantiation: ``name -> (fn, args)`` where ``args`` are
+    """Every Pallas kernel this repo ships, with representative abstract
+    instantiations: ``name -> (fn, args)`` where ``args`` are
     :class:`jax.ShapeDtypeStruct` trees suitable for ``jax.make_jaxpr(fn)``.
 
     The static kernel linter (``analysis/kernel_lint.py``) traces each entry
     and checks VMEM budgets, MXU tile alignment, BlockSpec index-map
-    coverage, and accumulator init/finish discipline.  Shapes are chosen so
-    every grid has more than one step along each axis the kernel tiles —
-    a coverage or accumulator bug cannot hide behind a degenerate grid.
+    coverage, and accumulator init/finish discipline.  The conv kernels are
+    registered once per :func:`conv_lint_geometries` kind (``name[kind]``)
+    — a hardcoded single geometry would let a geometry-dependent violation
+    in the 1x1/strided cases that actually ship slip past the linter.
+    Shapes are chosen so every grid has more than one step along each axis
+    the kernel tiles.
     """
     from repro.kernels import conv, flash_attn, psg_matmul, quant
 
@@ -213,15 +264,10 @@ def shipped_kernels() -> Dict[str, Tuple[Callable, tuple]]:
     xm, gm = S((1024, 256), i8), S((1024, 256), i8)
     xq, gq = S((1024, 256), i8), S((1024, 256), i16)
     tau = S((), f32)
-    # conv operands: CIFAR stage geometry, pre-padded NHWC input, dout=256
-    # so the output-channel axis tiles (grid (B, 2) / (2, B))
-    cx = S((4, 34, 34, 16), f32)            # 32x32 + k=3 halo
-    cw = S((3 * 3 * 16, 256), f32)          # patch-major weight
-    cg = S((4, 32, 32, 256), f32)
     # attention operands: S=256 (2 q-blocks, 2 kv-blocks), GQA 4->2 heads
     q = S((2, 256, 4, 128), f32)
     kv = S((2, 256, 2, 128), f32)
-    return {
+    entries: Dict[str, Tuple[Callable, tuple]] = {
         "psg_grad_w_pallas": (
             lambda a, b, c, d, t: psg_matmul.psg_grad_w_pallas(
                 a, b, c, d, t, interpret=True),
@@ -230,23 +276,36 @@ def shipped_kernels() -> Dict[str, Tuple[Callable, tuple]]:
             lambda a, b: psg_matmul.predictor_matmul_pallas(
                 a, b, interpret=True),
             (xm, gm)),
-        "conv_fwd_pallas": (
-            functools.partial(conv.conv_fwd_pallas, k=3, stride=1,
-                              interpret=True),
-            (cx, cw)),
-        "conv_grad_w_predictor_pallas": (
-            functools.partial(conv.conv_grad_w_predictor_pallas, k=3,
-                              stride=1, interpret=True),
-            (cx, cg)),
-        "conv_grad_w_pallas": (
-            lambda a, b, c, d, t: conv.conv_grad_w_pallas(
-                a, b, c, d, t, k=3, stride=1, interpret=True),
-            (cx, cg, cx, cg, tau)),
         "quantize_pallas": (
             functools.partial(quant.quantize_pallas, bits=8, interpret=True),
-            (S((512, 1024), f32),)),
+            (S((512, 1024), f32,),)),
         "flash_attention": (
             functools.partial(flash_attn.flash_attention, causal=True,
                               interpret=True),
             (q, kv, kv)),
     }
+    B = 4
+    for kind, (k, s, hw, cin, cout) in conv_lint_geometries().items():
+        pad = k // 2
+        hp = hw + 2 * pad
+        ho = (hp - k) // s + 1
+        cx = S((B, hp, hp, cin), f32)       # pre-padded NHWC input
+        cw = S((k * k * cin, cout), f32)    # patch-major weight
+        cg = S((B, ho, ho, cout), f32)
+        entries[f"conv_fwd_pallas[{kind}]"] = (
+            functools.partial(conv.conv_fwd_pallas, k=k, stride=s,
+                              interpret=True),
+            (cx, cw))
+        entries[f"conv_grad_w_predictor_pallas[{kind}]"] = (
+            functools.partial(conv.conv_grad_w_predictor_pallas, k=k,
+                              stride=s, interpret=True),
+            (cx, cg))
+        entries[f"conv_grad_w_pallas[{kind}]"] = (
+            (lambda a, b, c, d, t, _k=k, _s=s: conv.conv_grad_w_pallas(
+                a, b, c, d, t, k=_k, stride=_s, interpret=True)),
+            (cx, cg, cx, cg, tau))
+        entries[f"conv_grad_x_pallas[{kind}]"] = (
+            functools.partial(conv.conv_grad_x_pallas, k=k, stride=s,
+                              hp=hp, wp=hp, interpret=True),
+            (cg, cw))
+    return entries

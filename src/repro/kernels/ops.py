@@ -85,6 +85,21 @@ def conv_fwd(xq: jnp.ndarray, wq: jnp.ndarray, k: int, stride: int,
                                interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("k", "stride", "hp", "wp", "interpret"))
+def conv_grad_x(gq: jnp.ndarray, wq: jnp.ndarray, k: int, stride: int,
+                hp: int, wp: int, interpret: bool = True) -> jnp.ndarray:
+    """Implicit transposed-conv input gradient on pre-quantized operands.
+
+    ``gq``: quantized output-grad ``(B, Ho, Wo, dout)``; ``wq``:
+    patch-major quantized weight; ``hp``/``wp``: the pre-padded input
+    extent.  Returns ``dx (B, hp, wp, C)`` float32 — value-equal to the
+    col2im reference (``kernels/ref.conv_grad_x_ref``) up to fp32
+    tap-summation order; no dpatches tensor, no k^2 scatter passes.
+    """
+    return _cv.conv_grad_x_pallas(gq, wq, k=k, stride=stride, hp=hp, wp=wp,
+                                  interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("cfg", "k", "stride", "interpret"))
 def conv_grad_w(xp: jnp.ndarray, gy: jnp.ndarray, cfg: PSGConfig,
                 k: int, stride: int, interpret: bool = True

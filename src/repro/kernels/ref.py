@@ -88,6 +88,32 @@ def conv_fwd_ref(xp: jnp.ndarray, w: jnp.ndarray, k: int, stride: int
     return y.reshape(B, ho, wo, -1)
 
 
+def conv_grad_x_ref(gq: jnp.ndarray, wq: jnp.ndarray, k: int, stride: int,
+                    hp: int, wp: int) -> jnp.ndarray:
+    """Per-tap col2im scatter-add input gradient — the demoted reference
+    the implicit transposed-conv kernel (``kernels/conv.py``) is held to.
+
+    Each tap's ``(B*Ho*Wo, C)`` contribution is computed and scattered
+    into a strided window of the full-size accumulator: k^2 strided
+    read-modify-write passes, the traffic pattern the kernel eliminates.
+    Accumulation is forced to float32 regardless of the operand dtype
+    (accumulating ``k^2`` taps in a narrow gradient dtype loses low-order
+    contributions; ``tests/test_conv.py`` pins the regression).
+    """
+    from repro.kernels.conv import to_tap_major
+    B, ho, wo, dout = gq.shape
+    C = wq.shape[0] // (k * k)
+    wt = to_tap_major(wq.astype(jnp.float32), k, C)
+    g2 = gq.astype(jnp.float32).reshape(-1, dout)
+    dx = jnp.zeros((B, hp, wp, C), jnp.float32)
+    for t in range(k * k):
+        ki, kj = t // k, t % k
+        g_t = (g2 @ wt[t * C:(t + 1) * C, :].T).reshape(B, ho, wo, C)
+        dx = dx.at[:, ki:ki + (ho - 1) * stride + 1:stride,
+                   kj:kj + (wo - 1) * stride + 1:stride, :].add(g_t)
+    return dx
+
+
 def conv_grad_w_ref(xp: jnp.ndarray, gy: jnp.ndarray, cfg: PSGConfig,
                     k: int, stride: int) -> jnp.ndarray:
     """Element-level PSG conv weight gradient: materialize the im2col

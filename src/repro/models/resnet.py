@@ -58,17 +58,21 @@ def init_conv(key, cin: int, cout: int, k: int = 3) -> Params:
 def conv2d(p: Params, x: jnp.ndarray, k: int = 3, stride: int = 1) -> jnp.ndarray:
     """x: (B, H, W, C) -> (B, H', W', cout).
 
-    Default path: materialized im2col + ``psg.matmul`` (the original
-    PSG-routable formulation, kept as the reference/fallback).  With
-    ``PSGConfig.fused_conv`` set on the active PSG context, the conv runs
-    through ``psg.conv2d`` instead — the fused implicit-GEMM Pallas
-    kernels (``kernels/conv.py``) that gather the k x k patches inside
-    the kernel and never write the ``(B*H'*W', k*k*C)`` im2col operand to
-    HBM (DESIGN.md §Kernels).  Both model families share this entry point
-    (the MobileNetV2 1x1 expand/project/head convs included).
+    With an active PSG context whose ``fused_conv`` resolves on (the
+    default on the reference/interpret backends — see
+    ``psg.fused_conv_active``), the conv runs through ``psg.conv2d`` — the
+    fused implicit-GEMM Pallas kernels (``kernels/conv.py``) that gather
+    the k x k patches inside the kernel in BOTH directions (forward, PSG
+    weight gradient, and the implicit transposed-conv input gradient) and
+    never write a ``(B*H'*W', k*k*C)`` patch tensor to HBM (DESIGN.md
+    §Kernels).  Otherwise: materialized im2col + ``psg.matmul`` (the
+    original PSG-routable formulation, kept as the correctness anchor and
+    the Mosaic default pending real-TPU profiling).  Both model families
+    share this entry point (the MobileNetV2 1x1 expand/project/head convs
+    included).
     """
     cfg = psg.active_config()
-    if cfg is not None and cfg.fused_conv:
+    if psg.fused_conv_active(cfg):
         return psg.conv2d(x, p["w"], k=k, stride=stride)
     B, H, W, C = x.shape
     pad = k // 2

@@ -20,7 +20,10 @@ from repro.core.config import (E2TrainConfig, Experiment, PSGConfig,
 from repro.kernels import dispatch, ops, ref
 from repro.models.resnet import conv2d as model_conv2d
 
-CFG = PSGConfig(enabled=True)
+# fused_conv=None now AUTO-resolves fused-on for non-Mosaic backends
+# (core/psg.fused_conv_active), so the im2col comparator must opt out
+# explicitly.
+CFG = PSGConfig(enabled=True, fused_conv=False)
 CFG_FUSED = PSGConfig(enabled=True, fused_conv=True)
 
 # every distinct conv KIND of the paper's ResNets at test batch, plus the
@@ -112,6 +115,108 @@ def test_fused_conv_fwd_matches_ref():
     want = ref.conv_fwd_ref(xp, w, 3, 1)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# input-gradient kernel (implicit transposed conv)
+# ---------------------------------------------------------------------------
+
+
+def _dx_operands(B, H, C, Cout, k, s):
+    """(gy, w, xp, stride) for the dx kernel after psg.conv2d's
+    1x1-downsample normalization and SAME padding."""
+    x, w, gy = _data(B, H, C, Cout, k, s)
+    if k < s:                      # psg.conv2d's 1x1-downsample normalization
+        x, s = x[:, ::s, ::s, :], 1
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0))) if pad else x
+    return gy, w, xp, s
+
+
+@pytest.mark.parametrize("B,H,C,Cout,k,s", CONV_CASES)
+def test_conv_grad_x_kernel_matches_ref_and_oracle(B, H, C, Cout, k, s):
+    """The implicit transposed-conv kernel matches the demoted col2im
+    reference AND the float32 ``jax.vjp`` oracle of the materialized
+    forward on every shipped geometry (stride-2 included)."""
+    gy, w, xp, s = _dx_operands(B, H, C, Cout, k, s)
+    Hp = xp.shape[1]
+    got = ops.conv_grad_x(gy, w, k, s, Hp, Hp)
+    assert got.shape == xp.shape and got.dtype == jnp.float32
+    want = ref.conv_grad_x_ref(gy, w, k, s, Hp, Hp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    _, vjp = jax.vjp(lambda xp_: ref.conv_fwd_ref(xp_, w, k, s), xp)
+    (oracle,) = vjp(gy)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,H,C,Cout,k,s", CONV_CASES)
+def test_conv_grad_x_dispatch_backends_agree(B, H, C, Cout, k, s):
+    gy, w, xp, s = _dx_operands(B, H, C, Cout, k, s)
+    Hp = xp.shape[1]
+    with dispatch.override_backend("interpret"):
+        dx_i = dispatch.conv_grad_x(gy, w, CFG, k=k, stride=s, hp=Hp, wp=Hp)
+    with dispatch.override_backend("reference"):
+        dx_r = dispatch.conv_grad_x(gy, w, CFG, k=k, stride=s, hp=Hp, wp=Hp)
+    np.testing.assert_allclose(np.asarray(dx_i), np.asarray(dx_r),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_conv_grad_x_accumulates_in_f32_regression():
+    """Regression: ``_psg_conv2d_bwd`` used to accumulate dx in
+    ``gq.dtype`` — with low-precision cotangents the k*k tap sums
+    collapsed at bf16 precision.  Both the kernel path and the demoted
+    reference must hit the f32 oracle (computed on the same
+    bf16-rounded operands) at f32 tolerance, and return f32."""
+    gy, w, xp, s = _dx_operands(2, 8, 16, 32, 3, 1)
+    Hp = xp.shape[1]
+    gyb, wb = gy.astype(jnp.bfloat16), w.astype(jnp.bfloat16)
+    _, vjp = jax.vjp(
+        lambda xp_: ref.conv_fwd_ref(xp_, wb.astype(jnp.float32), 3, s), xp)
+    (oracle,) = vjp(gyb.astype(jnp.float32))
+    for name, fn in (("kernel", ops.conv_grad_x),
+                     ("reference", ref.conv_grad_x_ref)):
+        dx = fn(gyb, wb, 3, s, Hp, Hp)
+        assert dx.dtype == jnp.float32, name
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(oracle),
+                                   rtol=1e-5, atol=1e-7, err_msg=name)
+
+
+def test_fused_conv_is_default_on_non_mosaic_backends():
+    """fused_conv=None auto-resolves: ON under reference/interpret, OFF
+    under Mosaic (pending a real-TPU profile) and when PSG is off."""
+    auto = PSGConfig(enabled=True)
+    assert psg.fused_conv_active(auto)                  # interpret default
+    with dispatch.override_backend("reference"):
+        assert psg.fused_conv_active(auto)
+    with dispatch.override_backend("mosaic"):
+        assert not psg.fused_conv_active(auto)
+        assert psg.fused_conv_active(PSGConfig(enabled=True,
+                                               fused_conv=True))
+    assert not psg.fused_conv_active(CFG)               # explicit opt-out
+    assert not psg.fused_conv_active(None)
+
+
+def test_fused_fwd_bwd_moves_no_patch_tensor():
+    """Acceptance: with fused conv on, neither direction materializes a
+    patch tensor — jaxpr_cost classes ZERO gather movement and no
+    scatter passes remain (the demoted col2im loop was scatter-add);
+    the im2col path shows the patch-extraction gather traffic."""
+    from repro.analysis.jaxpr_cost import jaxpr_costs
+    x, w, gy = _data(2, 8, 16, 32, 3, 2)
+
+    def make_grad(cfg):
+        def loss(w_, x_):
+            with psg.enable(cfg):
+                y = model_conv2d({"w": w_}, x_, k=3, stride=2)
+            return jnp.sum(y * gy)
+        return jax.grad(loss, argnums=(0, 1))
+
+    fused, im2col = make_grad(CFG_FUSED), make_grad(CFG)
+    assert jaxpr_costs(fused, w, x).total().gather_flops == 0.0
+    assert jaxpr_costs(im2col, w, x).total().gather_flops > 0.0
+    assert "scatter" not in str(jax.make_jaxpr(fused)(w, x))
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +329,35 @@ def test_fused_train_matches_im2col_train_losses():
         curves[fused] = [h["total_loss"] for h in tr.run(3)]
     np.testing.assert_allclose(curves[False][0], curves[True][0], rtol=1e-4)
     np.testing.assert_allclose(curves[False], curves[True], rtol=5e-2)
+
+
+@pytest.mark.parametrize("name,depth", [("resnet8", 8), ("mobilenetv2", 0)])
+def test_fused_default_train_step_both_backbones(name, depth):
+    """End-to-end train steps on BOTH CNN backbones with the fused conv
+    path active by DEFAULT (fused_conv=None on the interpret backend):
+    losses stay finite and continuous step to step, and the measured
+    psg_fallback_ratio telemetry is emitted."""
+    from repro.data.synthetic import GaussianImageTask, make_image_batch
+    from repro.training.train_step import init_train_state
+    from repro.training.trainer import Trainer
+
+    cfg = PSGConfig(enabled=True, swa=False)      # fused_conv left at None
+    assert psg.fused_conv_active(cfg)
+    exp = Experiment(model=cnn_model(name, depth, width=8),
+                     e2=E2TrainConfig(psg=cfg),
+                     train=TrainConfig(global_batch=2, lr=0.03,
+                                       optimizer="psg", total_steps=8,
+                                       schedule="constant"),
+                     task="cifar_cnn")
+    task = GaussianImageTask(num_classes=10, snr=2.0)
+    tr = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp),
+                 lambda s, sh: make_image_batch(task, 0, s, sh, 2))
+    hist = tr.run(3)
+    losses = [h["total_loss"] for h in hist]
+    assert all(np.isfinite(l) for l in losses)
+    # continuity: no step-to-step blowup from the dx path
+    assert max(losses) < 10 * min(losses) + 10
+    assert all(0.0 < h["psg_fallback_ratio"] <= 1.0 for h in hist)
 
 
 # ---------------------------------------------------------------------------

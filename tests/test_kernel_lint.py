@@ -11,7 +11,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.analysis import lint_shipped
 from repro.analysis.kernel_lint import (VMEM_BUDGET_BYTES, LintFinding,
                                         lint_kernel)
-from repro.kernels.dispatch import shipped_kernels
+from repro.kernels.dispatch import conv_lint_geometries, shipped_kernels
 
 
 def _copy_kernel(x_ref, o_ref):
@@ -47,10 +47,49 @@ def test_shipped_kernels_lint_clean():
 
 
 def test_registry_enumerates_every_shipped_kernel():
-    assert set(shipped_kernels()) == {
+    base = {n.split("[")[0] for n in shipped_kernels()}
+    assert base == {
         "psg_grad_w_pallas", "predictor_matmul_pallas", "conv_fwd_pallas",
         "conv_grad_w_predictor_pallas", "conv_grad_w_pallas",
-        "quantize_pallas", "flash_attention"}
+        "conv_grad_x_pallas", "quantize_pallas", "flash_attention"}
+
+
+def test_conv_registry_covers_every_shipped_geometry_kind():
+    """The conv entries are parameterized over the geometry kinds of
+    ``configs/paper_cnns.resnet_conv_shapes`` (plus the MobileNetV2-style
+    pointwise) — the old hardcoded ``partial(..., k=3)`` registry never
+    linted the 1x1 conv geometries that actually ship."""
+    geoms = conv_lint_geometries()
+    assert set(geoms) == {"body", "strided", "down", "point"}
+    ks = {kind: g[0] for kind, g in geoms.items()}
+    assert ks["down"] == ks["point"] == 1 and ks["body"] == 3
+    # the down kind arrives pre-subsample-normalized: never k < stride
+    assert all(g[0] >= g[1] for g in geoms.values())
+    names = set(shipped_kernels())
+    for op in ("conv_fwd_pallas", "conv_grad_w_predictor_pallas",
+               "conv_grad_w_pallas", "conv_grad_x_pallas"):
+        for kind in geoms:
+            assert f"{op}[{kind}]" in names, (op, kind)
+
+
+def test_geometry_dependent_violation_is_caught():
+    """A violation that exists only at a specific conv geometry must be
+    caught when that geometry is linted: same kernel, same tile choice —
+    clean where the block spans the full dout extent, a tile-alignment
+    finding where it does not.  This is the failure mode the
+    kind-parameterized registry exists to expose."""
+    from repro.kernels import conv
+
+    S = jax.ShapeDtypeStruct
+    cx = S((4, 6, 6, 16), jnp.float32)
+    fn = functools.partial(conv.conv_fwd_pallas, k=1, stride=1, bn=40,
+                           interpret=True)
+    # dout=40: the 40-wide block IS the full extent — clean
+    assert lint_kernel(fn, cx, S((16, 40), jnp.float32), name="g40") == []
+    # dout=120: identical call, different geometry — misaligned block
+    rules = {f.rule for f in
+             lint_kernel(fn, cx, S((16, 120), jnp.float32), name="g120")}
+    assert "tile-alignment" in rules
 
 
 def test_registry_grids_are_not_degenerate():
