@@ -8,14 +8,26 @@ the repo's cost story (DESIGN.md §Analysis) —
   (``analysis/jaxpr_cost.py``),
 * the compiled-HLO totals (``launch/hlo_cost.py``),
 
-for both paper CIFAR backbones and the smoke LM, and runs the Pallas
-kernel linter plus the repository convention linter.  ``all_passed`` is
-the CI gate: any per-layer divergence above the declared tolerance, any
-unknown-trip-count loop, or any lint finding flips it false.
+for both paper CIFAR backbones and the smoke LM, and runs the full lint
+battery: the Pallas kernel linter, the repository convention linter, the
+precision-flow lint (sub-32-bit accumulators fed by narrow operands —
+the PR 7 bug class) and the hot-loop lint (the chunk program's
+``CHUNK_CONTRACT``).  ``all_passed`` is the CI gate: any per-layer
+divergence above the declared tolerance, any unknown-trip-count loop, or
+any lint finding flips it false.
+
+Schema (``schema_version`` 2): every lint section is
+``{"findings": [...], "passed": bool, "error": null | str}`` — a linter
+that *crashes* records its exception in ``error``, lands in the
+top-level ``lint_errors`` list, and fails the record with a distinct
+exit code in ``run.py`` (a crashing linter must never pass CI silently).
 """
 from __future__ import annotations
 
-from typing import Iterable, List
+import traceback
+from typing import Callable, Iterable, List
+
+SCHEMA_VERSION = 2
 
 
 def _experiments():
@@ -26,29 +38,61 @@ def _experiments():
             smoke_experiment("llama3_8b")]
 
 
+def _lint_section(run: Callable[[], dict]) -> dict:
+    """Run one lint pass, capturing a crash as ``error`` (≠ a failure)."""
+    try:
+        section = dict(run())
+        section.setdefault("error", None)
+        return section
+    except Exception as e:  # noqa: BLE001 — the point is to record it
+        return {"findings": None, "passed": False,
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc(limit=8)}
+
+
+def _lint_sections() -> dict:
+    from repro.analysis import (hotloop_report, lint_repo, lint_shipped,
+                                precision_report)
+
+    def kernel_section():
+        findings = [str(f) for f in lint_shipped()]
+        return {"findings": findings, "passed": not findings}
+
+    def repo_section():
+        findings = [str(f) for f in lint_repo()]
+        return {"findings": findings, "passed": not findings}
+
+    return {
+        "kernel_lint": _lint_section(kernel_section),
+        "repo_lint": _lint_section(repo_section),
+        "precision": _lint_section(precision_report),
+        "hotloop": _lint_section(hotloop_report),
+    }
+
+
 def audit_json(fast: bool = True) -> dict:
-    from repro.analysis import audit_experiment, lint_repo, lint_shipped
+    from repro.analysis import audit_experiment
 
     audits = []
     for exp in _experiments():
         rep = audit_experiment(exp, batch=4)
         audits.append(rep.to_dict())
 
-    kernel_findings = [str(f) for f in lint_shipped()]
-    repo_findings = [str(f) for f in lint_repo()]
+    sections = _lint_sections()
+    lint_errors = [name for name, s in sections.items() if s.get("error")]
     all_passed = (all(a["passed"] for a in audits)
-                  and not kernel_findings and not repo_findings)
-    return {"audits": audits,
-            "kernel_lint": {"findings": kernel_findings,
-                            "passed": not kernel_findings},
-            "repo_lint": {"findings": repo_findings,
-                          "passed": not repo_findings},
+                  and all(s["passed"] for s in sections.values())
+                  and not lint_errors)
+    return {"schema_version": SCHEMA_VERSION,
+            "audits": audits,
+            **sections,
+            "lint_errors": lint_errors,
             "all_passed": all_passed}
 
 
 def run(fast: bool = True) -> Iterable[str]:
     """CSV rows for the default bench table (pass/fail as derived column)."""
-    from repro.analysis import audit_experiment, lint_repo, lint_shipped
+    from repro.analysis import audit_experiment
 
     rows: List[str] = []
     for exp in _experiments():
@@ -56,7 +100,12 @@ def run(fast: bool = True) -> Iterable[str]:
         rows.append(f"audit_{rep.model},0.0,"
                     f"{'pass' if rep.passed else 'FAIL'}:"
                     f"hlo_rel={rep.hlo_rel_diff:.4f}")
-    nk, nr = len(lint_shipped()), len(lint_repo())
-    rows.append(f"kernel_lint,0.0,{'pass' if nk == 0 else f'FAIL:{nk}'}")
-    rows.append(f"repo_lint,0.0,{'pass' if nr == 0 else f'FAIL:{nr}'}")
+    sections = _lint_sections()
+    for name in ("kernel_lint", "repo_lint", "precision", "hotloop"):
+        s = sections[name]
+        if s.get("error"):
+            rows.append(f"{name},0.0,ERROR:{s['error']}")
+        else:
+            n = len(s["findings"])
+            rows.append(f"{name},0.0,{'pass' if n == 0 else f'FAIL:{n}'}")
     return rows

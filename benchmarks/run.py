@@ -22,10 +22,12 @@ path; exits nonzero if any path's byte accounting is incomplete.
 
 ``--json-audit [PATH]`` (default ``BENCH_audit.json``) records the static
 cost audit: per-layer CostModel vs jaxpr vs compiled-HLO reconciliation
-for the paper backbones and the smoke LM, plus the Pallas kernel linter
-and the repo convention linter (benchmarks/bench_audit.py).  Exits
-nonzero when the audit or a linter fails — this is the CI gate.
-CI uploads all four BENCH JSONs.
+for the paper backbones and the smoke LM, plus the full lint battery —
+Pallas kernel linter, repo convention linter, precision-flow lint and
+hot-loop lint (benchmarks/bench_audit.py).  Exits 1 when the audit or a
+linter *fails*, 2 when a lint pass *errors* (a crashing linter must not
+pass CI silently) — this is the CI gate.  CI uploads all four BENCH
+JSONs.
 """
 from __future__ import annotations
 
@@ -141,6 +143,13 @@ def main(argv=None) -> None:
             with open(args.json_audit, "w") as f:
                 json.dump(record, f, indent=2)
             print(f"wrote {args.json_audit}", file=sys.stderr)
+            # a linter that CRASHED is not a linter that passed: distinct
+            # exit code so CI can tell "findings" (1) from "broken
+            # tooling" (2) — a crashing lint pass must never gate green
+            if record.get("lint_errors"):
+                print(f"lint pass(es) errored: "
+                      f"{', '.join(record['lint_errors'])}", file=sys.stderr)
+                sys.exit(2)
             if not record["all_passed"]:
                 sys.exit(1)
         return

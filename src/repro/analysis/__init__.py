@@ -19,17 +19,38 @@ registered through ``kernels/dispatch.py`` (VMEM budget, MXU tile
 alignment, BlockSpec index-map coverage, accumulator init/finish
 discipline), and ``analysis/repo_lint.py`` enforces repo conventions
 (no ``pl.pallas_call`` outside ``kernels/``, no ``REPRO_*`` env reads
-outside the dispatch layer).
+outside the dispatch layer, no device→host syncs outside ``training/``).
+
+``analysis/dataflow.py`` is the numerics counterpart to the cost walker:
+an abstract interpreter that propagates precision provenance (narrow-
+dtype lineage, reduction depth, accumulation cycles) through the same
+traced programs — including scan carries, cond branches and
+``pallas_call`` bodies.  Two lint passes ride on it:
+``analysis/precision_lint.py`` flags sub-32-bit accumulators fed by
+narrow-descended operands (the PR 7 bug class) over every shipped kernel
+and both CNN backbones' traced fwd+bwd, and ``analysis/hotloop_lint.py``
+verifies the chunk program's ``CHUNK_CONTRACT`` (no host callbacks,
+static trips, shape-stable body, device-resident metrics, no donation by
+default).  All of it lands in BENCH_audit.json and gates CI.
 """
 from repro.analysis.audit import (AuditReport, LayerRow, audit_experiment,
                                   audit_totals)
+from repro.analysis.dataflow import (DataflowResult, Prov, ReductionSite,
+                                     analyze, analyze_jaxpr)
+from repro.analysis.hotloop_lint import (HotloopFinding, hotloop_report,
+                                         lint_chunk)
 from repro.analysis.jaxpr_cost import (OpCounts, ProgramCosts, jaxpr_costs,
-                                       scope_tag)
+                                       scope_tag, sub_jaxprs)
 from repro.analysis.kernel_lint import LintFinding, lint_jaxpr, lint_shipped
+from repro.analysis.precision_lint import (PrecisionFinding, lint_kernels,
+                                           precision_report)
 from repro.analysis.repo_lint import lint_repo
 
 __all__ = [
     "AuditReport", "LayerRow", "audit_experiment", "audit_totals",
-    "OpCounts", "ProgramCosts", "jaxpr_costs", "scope_tag",
+    "OpCounts", "ProgramCosts", "jaxpr_costs", "scope_tag", "sub_jaxprs",
+    "DataflowResult", "Prov", "ReductionSite", "analyze", "analyze_jaxpr",
+    "PrecisionFinding", "lint_kernels", "precision_report",
+    "HotloopFinding", "lint_chunk", "hotloop_report",
     "LintFinding", "lint_jaxpr", "lint_shipped", "lint_repo",
 ]

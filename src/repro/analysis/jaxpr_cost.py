@@ -183,8 +183,13 @@ def _conv_counts(eqn) -> Tuple[float, float]:
     return out_n * macs_per_out, 0.0
 
 
-def _sub_jaxprs(eqn):
-    """(closed_jaxpr, trip_multiplier, is_branch_set) children of an eqn."""
+def sub_jaxprs(eqn):
+    """(closed_jaxpr, trip_multiplier) children of an equation, plus
+    whether they are a branch set (``cond``) rather than a sequence.
+
+    Public: the dataflow/hot-loop analyzers reuse this as the one place
+    that knows where every higher-order primitive hides its sub-programs
+    (scan/while/cond/pallas_call/pjit/custom_vjp/remat)."""
     prim = eqn.primitive.name
     p = eqn.params
     if prim == "scan":
@@ -217,7 +222,7 @@ def _walk(jaxpr, costs: ProgramCosts, scale: float,
         tag = scope_tag(eqn) or outer_scope
         prim = eqn.primitive.name
 
-        subs, is_branches = _sub_jaxprs(eqn)
+        subs, is_branches = sub_jaxprs(eqn)
         if subs:
             if prim == "while":
                 costs.unknown_trips += 1

@@ -1,7 +1,7 @@
 """Repository convention linter (AST-based, no imports executed).
 
-Two conventions this repo's architecture depends on (DESIGN.md §Dispatch,
-§Analysis), enforced statically over ``src/repro``:
+Three conventions this repo's architecture depends on (DESIGN.md
+§Dispatch, §Analysis), enforced statically over ``src/repro``:
 
 * ``pallas-outside-kernels`` — only modules under ``kernels/`` may call
   ``pl.pallas_call``.  Everything else goes through the dispatch layer
@@ -14,6 +14,16 @@ Two conventions this repo's architecture depends on (DESIGN.md §Dispatch,
   dispatch refactor precisely because an env read inside traced code bakes
   into whichever jit cache entry traced first.
 
+* ``host-sync`` — device→host synchronization (``jax.device_get``,
+  ``.block_until_ready()``, ``np.asarray`` on device values) is confined
+  to ``training/`` (plus the repo-level ``benchmarks/``/``examples/``
+  trees, which are host drivers by definition).  The chunked loop's whole
+  throughput story is "one sync per chunk boundary" (DESIGN.md §Loop); a
+  stray ``device_get`` in a model or kernel module reintroduces the
+  per-step stall the hot-loop lint exists to prevent.  Modules that are
+  host-side *by design* are allowlisted with a justification string
+  (same convention as ``analysis/precision_lint.ALLOWLIST``).
+
 Run as a module (``python -m repro.analysis.repo_lint``) it exits nonzero
 on any finding — that is the CI hook.
 """
@@ -22,20 +32,40 @@ from __future__ import annotations
 import ast
 import os
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 # files (relative to the src root, posix separators) allowed to call
 # pl.pallas_call
 _PALLAS_ALLOWED_PREFIX = "repro/kernels/"
 # the one sanctioned REPRO_* env read: (file, variable)
 _ENV_ALLOWED = {("repro/kernels/dispatch.py", "REPRO_KERNEL_BACKEND")}
+# trees where host syncs are the module's job, not a hazard
+_HOST_SYNC_ALLOWED_PREFIXES = ("repro/training/", "benchmarks/", "examples/")
+# file -> justification: modules that are host-side by design.  A new
+# entry REQUIRES a justification string (enforced by lint_source) — an
+# exception without a recorded why is how conventions rot.
+_HOST_SYNC_ALLOWED: Dict[str, str] = {
+    "repro/core/smd.py":
+        "counter-based SMD decides drops ON the host so a dropped step "
+        "never reaches the device — the paper's zero-overhead property "
+        "(DESIGN.md §Loop)",
+    "repro/ft/checkpoint.py":
+        "checkpoint save/restore is host I/O; np.asarray is the "
+        "device->host copy at the serialization boundary",
+    "repro/data/synthetic.py":
+        "synthetic data generation is host-side numpy by design — batches "
+        "reach the device in one device_put per chunk",
+    "repro/serving/engine.py":
+        "single-host wave-batching demo decodes on the host; the ROADMAP "
+        "open item rebuilds it on the chunk compiler",
+}
 
 
 @dataclass(frozen=True)
 class RepoFinding:
     path: str          # src-root-relative, posix
     line: int
-    rule: str          # "pallas-outside-kernels" | "env-read"
+    rule: str          # "pallas-outside-kernels" | "env-read" | "host-sync"
     message: str
 
     def __str__(self) -> str:
@@ -79,11 +109,42 @@ def _env_var_of(node: ast.AST) -> Optional[Tuple[str, int]]:
     return None
 
 
+def _host_sync_of(node: ast.AST) -> Optional[Tuple[str, int]]:
+    """(description, lineno) if this node is a device→host sync call."""
+    if not isinstance(node, ast.Call):
+        return None
+    if isinstance(node.func, ast.Attribute) \
+            and node.func.attr == "block_until_ready":
+        return ".block_until_ready()", node.lineno
+    chain = _attr_chain(node.func) or ""
+    if chain == "jax.device_get" or chain.endswith(".device_get") \
+            or chain == "device_get":
+        return "jax.device_get", node.lineno
+    if chain in ("np.asarray", "numpy.asarray", "onp.asarray",
+                 "np.array", "numpy.array"):
+        return chain, node.lineno
+    return None
+
+
+def check_host_sync_allowlist(
+        allowed: Optional[Dict[str, str]] = None) -> None:
+    """Every host-sync allowlist entry must carry a justification."""
+    entries = _HOST_SYNC_ALLOWED if allowed is None else allowed
+    for path, why in entries.items():
+        if not (isinstance(why, str) and why.strip()):
+            raise ValueError(
+                f"host-sync allowlist entry {path!r} has no justification "
+                "— record why this module is host-side by design")
+
+
 def lint_source(src: str, relpath: str) -> List[RepoFinding]:
     """Lint one module's source text (``relpath`` is src-root-relative)."""
+    check_host_sync_allowlist()
     findings: List[RepoFinding] = []
     tree = ast.parse(src, filename=relpath)
     in_kernels = relpath.startswith(_PALLAS_ALLOWED_PREFIX)
+    host_ok = (relpath.startswith(_HOST_SYNC_ALLOWED_PREFIXES)
+               or relpath in _HOST_SYNC_ALLOWED)
     for node in ast.walk(tree):
         if isinstance(node, ast.Attribute) and node.attr == "pallas_call" \
                 and not in_kernels:
@@ -91,6 +152,14 @@ def lint_source(src: str, relpath: str) -> List[RepoFinding]:
                 relpath, node.lineno, "pallas-outside-kernels",
                 "pl.pallas_call outside kernels/ — route through "
                 "repro.kernels.dispatch"))
+        sync = _host_sync_of(node)
+        if sync is not None and not host_ok:
+            what, line = sync
+            findings.append(RepoFinding(
+                relpath, line, "host-sync",
+                f"{what} outside training/ — device->host syncs belong to "
+                "the loop boundary (one per chunk); host-side-by-design "
+                "modules need a justified _HOST_SYNC_ALLOWED entry"))
         env = _env_var_of(node)
         if env is not None:
             name, line = env

@@ -132,6 +132,13 @@ def _psg_fwd(x2, w, probe, cfg):
 
 
 def _psg_bwd(cfg, res, gy):
+    # precision: scope — origin tag for analysis/dataflow.py reports: any
+    # narrow accumulator found downstream names this backward as its site
+    with jax.named_scope("precision:psg_bwd"):
+        return _psg_bwd_impl(cfg, res, gy)
+
+
+def _psg_bwd_impl(cfg, res, gy):
     x2, w = res
     gq = quantize(gy, cfg.bits_g)
     wq = quantize(w, cfg.bits_x)
@@ -190,6 +197,12 @@ def _psg_conv2d_fwd(xp, w, probe, k, stride, cfg):
 
 
 def _psg_conv2d_bwd(k, stride, cfg, res, gy):
+    # precision: scope — see _psg_bwd; the PR 7 bug lived exactly here
+    with jax.named_scope("precision:psg_conv2d_bwd"):
+        return _psg_conv2d_bwd_impl(k, stride, cfg, res, gy)
+
+
+def _psg_conv2d_bwd_impl(k, stride, cfg, res, gy):
     xp, w = res
     B, Hp, Wp, C = xp.shape
     dout = w.shape[-1]

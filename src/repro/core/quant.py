@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -23,10 +24,12 @@ def qscale(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
 
 def quantize(x: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
     """Fake-quantize: round to a ``bits``-bit symmetric fixed-point grid."""
-    s = qscale(x, bits, axis)
-    q = jnp.round(x.astype(jnp.float32) / s)
-    lim = 2.0 ** (bits - 1) - 1.0
-    return (jnp.clip(q, -lim, lim) * s).astype(x.dtype)
+    # precision: scope — marks quantized provenance for analysis/dataflow.py
+    with jax.named_scope("precision:quantize"):
+        s = qscale(x, bits, axis)
+        q = jnp.round(x.astype(jnp.float32) / s)
+        lim = 2.0 ** (bits - 1) - 1.0
+        return (jnp.clip(q, -lim, lim) * s).astype(x.dtype)
 
 
 def quantize_int(x: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -309,3 +309,28 @@ def shipped_kernels() -> Dict[str, Tuple[Callable, tuple]]:
                               hp=hp, wp=hp, interpret=True),
             (cg, cw))
     return entries
+
+
+def kernel_acc_dtypes() -> Dict[str, str]:
+    """Declared accumulator-dtype intent per shipped kernel (base name,
+    without the ``[geometry]`` suffix of :func:`shipped_kernels` keys).
+
+    This is the contract the precision lint
+    (``analysis/precision_lint.py``) holds the kernels to: every
+    *float-dtype* ref accumulator the dataflow engine finds in a kernel's
+    trace must match the intent declared here, and every shipped kernel
+    must declare one.  Integer side-channels (fallback counters, sign
+    votes) are exempt — they saturate, they don't lose low-order partial
+    sums.  All kernels accumulate in float32: narrow operands are a
+    bandwidth story, never an accumulation story (the PR 7 lesson).
+    """
+    return {
+        "psg_grad_w_pallas": "float32",
+        "predictor_matmul_pallas": "float32",
+        "quantize_pallas": "float32",
+        "flash_attention": "float32",
+        "conv_fwd_pallas": "float32",
+        "conv_grad_w_predictor_pallas": "float32",
+        "conv_grad_w_pallas": "float32",
+        "conv_grad_x_pallas": "float32",
+    }

@@ -32,6 +32,36 @@ import numpy as np
 from repro.core.config import Experiment
 from repro.training.train_step import TrainState, make_train_step
 
+# The chunk program's contract, verified statically per commit by
+# ``analysis/hotloop_lint.py`` (DESIGN.md §Analysis).  Rule names are the
+# lint's vocabulary — keep them in sync with its rule table:
+#
+# * no-host-callback        — nothing inside the scan calls back to the
+#                             host (debug prints, io_callback, infeed);
+#                             one callback per step is the per-step loop's
+#                             sync cost all over again.
+# * static-trip-count       — the chunk is a ``lax.scan`` with a static K,
+#                             never a ``while`` (unknown trips poison the
+#                             HLO cost audit and defeat ahead-of-time
+#                             scheduling).
+# * shape-stable-body       — the scanned body's primitive mix must not
+#                             depend on K (a Python-value-dependent
+#                             operand would recompile per chunk length).
+# * device-resident-metrics — metrics return stacked ``(K, ...)``; the
+#                             sync happens at chunk boundaries, in the
+#                             caller.
+# * no-donation-default     — callers jit WITHOUT ``donate_argnums`` by
+#                             default (see the docstring below;
+#                             ``Trainer(donate_chunk_state=True)`` is the
+#                             explicit opt-in).
+CHUNK_CONTRACT = (
+    "no-host-callback",
+    "static-trip-count",
+    "shape-stable-body",
+    "device-resident-metrics",
+    "no-donation-default",
+)
+
 
 def make_chunk_step(exp: Experiment, K: Optional[int] = None):
     """Build ``(state, batches, step_increment) -> (state, stacked_metrics)``.
@@ -68,8 +98,11 @@ def make_chunk_step(exp: Experiment, K: Optional[int] = None):
             st = st._replace(step=st.step + (inc - 1))
             return train_step(st, batch)
 
-        return jax.lax.scan(body, state,
-                            (step_increment.astype(jnp.int32), batches))
+        # the named scope marks the contract-bearing scan for the static
+        # hot-loop lint (metadata only — fusion and numerics unchanged)
+        with jax.named_scope("hotloop:chunk"):
+            return jax.lax.scan(body, state,
+                                (step_increment.astype(jnp.int32), batches))
 
     return chunk_step
 

@@ -1,0 +1,234 @@
+"""Jaxpr dataflow engine (analysis/dataflow.py): precision provenance
+through elementwise ops, reductions, control flow and Pallas kernels."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis.dataflow import (ADD_CHAIN_SITE, acc_is_narrow, analyze)
+
+S = jax.ShapeDtypeStruct
+
+
+def hazards(fn, *args):
+    return analyze(fn, *args).hazards()
+
+
+# ---------------------------------------------------------------------------
+# the narrowness predicate
+# ---------------------------------------------------------------------------
+
+
+def test_acc_narrowness_is_itemsize_under_32_bits():
+    assert acc_is_narrow("bfloat16")
+    assert acc_is_narrow("float16")
+    assert acc_is_narrow("int8")
+    assert acc_is_narrow("int16")
+    assert not acc_is_narrow("float32")
+    assert not acc_is_narrow("int32")
+    assert not acc_is_narrow("float64")
+
+
+# ---------------------------------------------------------------------------
+# reductions
+# ---------------------------------------------------------------------------
+
+
+def test_f32_dot_records_a_site_but_no_hazard():
+    r = analyze(lambda a, b: a @ b,
+                S((8, 8), jnp.float32), S((8, 8), jnp.float32))
+    assert any(s.kind == "dot_general" for s in r.sites)
+    assert r.hazards() == []
+
+
+def test_bf16_dot_accumulating_in_bf16_is_a_hazard():
+    (h,) = hazards(lambda a, b: a @ b,
+                   S((8, 8), jnp.bfloat16), S((8, 8), jnp.bfloat16))
+    assert h.kind == "dot_general"
+    assert h.acc_dtype == "bfloat16"
+    assert "bfloat16" in h.narrow_operands
+
+
+def test_bf16_dot_with_f32_preferred_accumulator_is_clean():
+    def f(a, b):
+        return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+    assert hazards(f, S((8, 8), jnp.bfloat16), S((8, 8), jnp.bfloat16)) == []
+
+
+def test_jnp_sum_upcast_accumulation_is_correctly_clean():
+    # jnp.sum of bf16 converts to f32, reduces, converts back: the
+    # accumulator really is f32, so the engine must NOT flag it
+    assert hazards(lambda a: jnp.sum(a), S((64,), jnp.bfloat16)) == []
+
+
+def test_lax_reduce_in_bf16_is_a_hazard():
+    def f(a):
+        return jax.lax.reduce(a, jnp.bfloat16(0), jax.lax.add, (0,))
+    (h,) = hazards(f, S((64,), jnp.bfloat16))
+    assert h.kind == "reduce_sum" and h.acc_dtype == "bfloat16"
+
+
+def test_narrow_provenance_survives_upcast():
+    # bf16 -> f32 -> f16 reduce: operand lineage still carries bfloat16
+    def f(a):
+        v = a.astype(jnp.float32).astype(jnp.float16)
+        return jax.lax.reduce(v, jnp.float16(0), jax.lax.add, (0,))
+    (h,) = hazards(f, S((64,), jnp.bfloat16))
+    assert set(h.narrow_operands) >= {"bfloat16", "float16"}
+
+
+def test_scatter_add_in_narrow_dtype_is_a_hazard():
+    def f(acc, upd):
+        return acc.at[2:6].add(upd)
+    (h,) = hazards(f, S((16,), jnp.bfloat16), S((4,), jnp.bfloat16))
+    assert h.kind == "scatter-add" and h.acc_dtype == "bfloat16"
+
+
+# ---------------------------------------------------------------------------
+# additive chains (unrolled accumulation loops)
+# ---------------------------------------------------------------------------
+
+
+def test_add_chain_crossing_threshold_is_flagged():
+    assert ADD_CHAIN_SITE == 3
+    hz = hazards(lambda a: a + a + a + a + a, S((4,), jnp.bfloat16))
+    assert [h.kind for h in hz] == ["add-chain"]
+
+
+def test_short_add_runs_are_not_flagged():
+    # a residual add or a bias add must never be a finding
+    assert hazards(lambda a: a + a + a, S((4,), jnp.bfloat16)) == []
+
+
+# ---------------------------------------------------------------------------
+# control flow
+# ---------------------------------------------------------------------------
+
+
+def test_scan_carry_running_sum_in_bf16_is_a_hazard():
+    def f(xs):
+        def body(c, x):
+            return c + x, x
+        return jax.lax.scan(body, jnp.zeros((4,), jnp.bfloat16), xs)[0]
+    hz = hazards(f, S((10, 4), jnp.bfloat16))
+    assert any(h.kind == "scan-carry" and h.acc_dtype == "bfloat16"
+               for h in hz)
+
+
+def test_scan_carry_running_sum_in_f32_is_clean():
+    def f(xs):
+        def body(c, x):
+            return c + x.astype(jnp.float32), x
+        return jax.lax.scan(body, jnp.zeros((4,), jnp.float32), xs)[0]
+    assert hazards(f, S((10, 4), jnp.bfloat16)) == []
+
+
+def test_pass_through_scan_carry_is_not_an_accumulation():
+    def f(xs):
+        def body(c, x):
+            return c * 0.5, x          # no additive feedback
+        return jax.lax.scan(body, jnp.zeros((4,), jnp.bfloat16), xs)[0]
+    r = analyze(f, S((10, 4), jnp.bfloat16))
+    assert not any(s.kind == "scan-carry" for s in r.sites)
+
+
+def test_while_carry_sum_in_narrow_dtype_is_a_hazard():
+    def f(x):
+        def cond(cv):
+            return cv[0] < 10
+        def body(cv):
+            i, acc = cv
+            return i + 1, acc + acc * jnp.bfloat16(0.5)
+        return jax.lax.while_loop(cond, body, (0, x))
+    hz = hazards(f, S((4,), jnp.bfloat16))
+    assert any(h.kind == "scan-carry" and h.prim == "while" for h in hz)
+
+
+def test_cond_branches_join_narrow_lineage():
+    # one branch is pure f32, the other descends from bf16 — the joined
+    # value must carry bfloat16 lineage into the downstream reduction
+    def f(p, a32, b16):
+        v = jax.lax.cond(p, lambda: a32, lambda: b16.astype(jnp.float32))
+        return jax.lax.reduce(v.astype(jnp.float16), jnp.float16(0),
+                              jax.lax.add, (0,))
+    (h,) = hazards(f, S((), jnp.bool_), S((8,), jnp.float32),
+                   S((8,), jnp.bfloat16))
+    assert "bfloat16" in h.narrow_operands
+
+
+# ---------------------------------------------------------------------------
+# pallas kernels: the lattice flows through refs
+# ---------------------------------------------------------------------------
+
+
+def _accum_kernel_fn(acc_dtype):
+    def kernel(x_ref, o_ref, acc_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ref[...] += x_ref[...].astype(acc_dtype)
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    def f(x):
+        return pl.pallas_call(
+            kernel, grid=(2,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.bfloat16),
+            scratch_shapes=[pltpu.VMEM((8, 128), acc_dtype)],
+            interpret=True)(x)
+    return f
+
+
+def test_pallas_scratch_accumulator_following_operand_dtype_is_caught():
+    hz = hazards(_accum_kernel_fn(jnp.bfloat16), S((16, 128), jnp.bfloat16))
+    assert any(h.kind == "ref-accum" and h.acc_dtype == "bfloat16"
+               for h in hz)
+
+
+def test_pallas_f32_scratch_accumulator_is_clean():
+    assert hazards(_accum_kernel_fn(jnp.float32),
+                   S((16, 128), jnp.bfloat16)) == []
+
+
+def test_pallas_plain_overwrite_is_not_an_accumulation():
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2
+    def f(x):
+        return pl.pallas_call(
+            kernel, grid=(2,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((16, 128), jnp.bfloat16),
+            interpret=True)(x)
+    r = analyze(f, S((16, 128), jnp.bfloat16))
+    assert not any(s.kind == "ref-accum" for s in r.sites)
+    assert r.hazards() == []
+
+
+# ---------------------------------------------------------------------------
+# plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_analyze_accepts_shape_dtype_structs_and_never_executes():
+    # a shape that would be prohibitively large if materialized
+    r = analyze(lambda a, b: a @ b,
+                S((1 << 16, 1 << 12), jnp.bfloat16),
+                S((1 << 12, 1 << 14), jnp.bfloat16))
+    assert len(r.hazards()) == 1
+
+
+def test_sites_record_origin_of_narrowness():
+    (h,) = hazards(lambda a, b: a @ b,
+                   S((8, 8), jnp.bfloat16), S((8, 8), jnp.bfloat16))
+    assert "bfloat16" in h.origin
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_wide_programs_produce_no_hazards(dtype):
+    def f(a):
+        return jnp.cumsum(a) + a
+    assert hazards(f, S((16,), dtype)) == []

@@ -1,0 +1,138 @@
+"""Hot-loop lint (analysis/hotloop_lint.py): CHUNK_CONTRACT verified on
+the real chunk programs, and each rule pinned against a violating fixture."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.hotloop_lint import (HotloopFinding, hotloop_report,
+                                         lint_chunk, lint_program,
+                                         lint_trainer_default)
+from repro.training.loop import CHUNK_CONTRACT
+
+S = jax.ShapeDtypeStruct
+K = 3
+
+
+def _chunk_args():
+    state = S((4,), jnp.float32)
+    batches = {"x": S((K, 8), jnp.float32)}
+    incs = S((K,), jnp.int32)
+    return state, batches, incs
+
+
+def _good_chunk(state, batches, incs):
+    def body(c, xs):
+        b, inc = xs
+        loss = jnp.sum(b["x"]) + inc.astype(jnp.float32)
+        return c + loss, {"loss": loss}
+    return jax.lax.scan(body, state, (batches, incs))
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# the real chunk programs honour the contract (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_contract_tuple_matches_the_lints_rules():
+    assert set(CHUNK_CONTRACT) == {
+        "no-host-callback", "static-trip-count", "shape-stable-body",
+        "device-resident-metrics", "no-donation-default"}
+
+
+def test_cnn_chunk_program_passes():
+    from repro.configs.paper_cnns import cnn_model
+    from repro.core.config import E2TrainConfig, Experiment, TrainConfig
+    exp = Experiment(model=cnn_model("resnet14", 14), e2=E2TrainConfig(),
+                     train=TrainConfig(global_batch=8, lr=0.1,
+                                       total_steps=100, optimizer="sgdm"),
+                     task="cifar_cnn")
+    findings = lint_chunk(exp, K=K)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_lm_chunk_program_passes():
+    from repro.configs import smoke_experiment
+    findings = lint_chunk(smoke_experiment("llama3_8b"), K=K)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_trainer_donation_defaults_false():
+    assert lint_trainer_default() == []
+
+
+def test_report_shape_for_bench_audit():
+    rep = hotloop_report(exps=[])
+    assert rep == {"findings": [], "passed": True}
+
+
+# ---------------------------------------------------------------------------
+# each rule catches its violating fixture
+# ---------------------------------------------------------------------------
+
+
+def test_clean_synthetic_chunk_has_no_findings():
+    assert lint_program(_good_chunk, _chunk_args(), K) == []
+
+
+def test_host_callback_in_scanned_body_is_caught():
+    def chunk(state, batches, incs):
+        def body(c, xs):
+            b, inc = xs
+            loss = jnp.sum(b["x"])
+            jax.debug.print("loss={l}", l=loss)   # one host sync per step
+            return c + loss, {"loss": loss}
+        return jax.lax.scan(body, state, (batches, incs))
+    findings = lint_program(chunk, _chunk_args(), K, name="sync-fixture")
+    assert "no-host-callback" in _rules(findings)
+    f = next(f for f in findings if f.rule == "no-host-callback")
+    assert f.site.startswith("sync-fixture")
+
+
+def test_while_loop_chunk_fails_static_trip_count():
+    def chunk(state, batches, incs):
+        def cond(cv):
+            return cv[0] < K
+        def body(cv):
+            i, c = cv
+            return i + 1, c + jnp.sum(batches["x"][0])
+        _, c = jax.lax.while_loop(cond, body, (0, state))
+        return c, {"loss": jnp.broadcast_to(c[0], (K,))}
+    findings = lint_program(chunk, _chunk_args(), K)
+    assert "static-trip-count" in _rules(findings)
+
+
+def test_python_value_dependent_body_fails_shape_stability():
+    def chunk(state, batches, incs):
+        def body(c, xs):
+            b, inc = xs
+            loss = jnp.sum(b["x"])
+            if batches["x"].shape[0] > K:        # bakes K into the body
+                loss = jnp.tanh(loss)
+            return c + loss, {"loss": loss}
+        return jax.lax.scan(body, state, (batches, incs))
+    findings = lint_program(chunk, _chunk_args(), K)
+    assert "shape-stable-body" in _rules(findings)
+
+
+def test_prereduced_metrics_fail_device_residency():
+    def chunk(state, batches, incs):
+        c, m = _good_chunk(state, batches, incs)
+        return c, {"loss": jnp.mean(m["loss"])}   # synced scalar, not (K,)
+    findings = lint_program(chunk, _chunk_args(), K)
+    assert "device-resident-metrics" in _rules(findings)
+
+
+def test_donated_state_fails_no_donation_default():
+    findings = lint_program(_good_chunk, _chunk_args(), K,
+                            donate_argnums=(0,))
+    assert "no-donation-default" in _rules(findings)
+
+
+def test_findings_stringify_with_rule_and_site():
+    f = HotloopFinding("no-host-callback", "chunk/scan/debug_callback",
+                       "host round-trip")
+    assert "[no-host-callback]" in str(f) and "chunk/scan" in str(f)

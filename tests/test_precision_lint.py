@@ -1,0 +1,136 @@
+"""Precision lint (analysis/precision_lint.py): the PR 7 bug class caught
+statically — including the re-broken PR 7 fixture itself."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import precision_lint
+from repro.analysis.dataflow import analyze
+from repro.kernels.conv import to_tap_major
+from repro.kernels.ref import conv_grad_x_ref
+
+S = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# the PR 7 regression, re-broken on purpose
+# ---------------------------------------------------------------------------
+
+
+def _broken_conv_grad_x_ref(gq, wq, k, stride, hp, wp):
+    """conv_grad_x_ref exactly as it was BEFORE PR 7's fix: tap sums
+    accumulate in ``gq.dtype`` instead of forced float32."""
+    B, ho, wo, dout = gq.shape
+    C = wq.shape[0] // (k * k)
+    wt = to_tap_major(wq.astype(gq.dtype), k, C)
+    g2 = gq.reshape(-1, dout)
+    dx = jnp.zeros((B, hp, wp, C), gq.dtype)        # <- the bug
+    for t in range(k * k):
+        ki, kj = t // k, t % k
+        g_t = (g2 @ wt[t * C:(t + 1) * C, :].T).reshape(B, ho, wo, C)
+        dx = dx.at[:, ki:ki + (ho - 1) * stride + 1:stride,
+                   kj:kj + (wo - 1) * stride + 1:stride, :].add(g_t)
+    return dx
+
+
+_GQ = S((2, 8, 8, 8), jnp.bfloat16)
+_WQ = S((9 * 4, 8), jnp.bfloat16)
+
+
+def test_pr7_regression_fixture_fails_the_lint():
+    fn = partial(_broken_conv_grad_x_ref, k=3, stride=1, hp=10, wp=10)
+    hz = analyze(fn, _GQ, _WQ, name="pr7").hazards()
+    # the per-tap col2im loop shows up as both the bf16 GEMM and the
+    # bf16 scatter accumulation — site and dtype must be right
+    kinds = {h.kind for h in hz}
+    assert "scatter-add" in kinds
+    scatter = next(h for h in hz if h.kind == "scatter-add")
+    assert scatter.acc_dtype == "bfloat16"
+    assert scatter.narrow_operands == ("bfloat16",)
+    assert scatter.site.startswith("pr7")
+
+
+def test_fixed_reference_is_clean_under_bf16_cotangents():
+    fn = partial(conv_grad_x_ref, k=3, stride=1, hp=10, wp=10)
+    assert analyze(fn, _GQ, _WQ).hazards() == []
+
+
+def test_fixture_findings_carry_the_pr7_message():
+    fn = partial(_broken_conv_grad_x_ref, k=3, stride=1, hp=10, wp=10)
+    res = analyze(fn, _GQ, _WQ, name="pr7")
+    findings = precision_lint._hazard_findings("fixture", res)
+    assert findings
+    assert all(f.rule == "narrow-accumulator" for f in findings)
+    assert any("PR 7" in f.message for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# shipped surfaces are clean on main (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_every_shipped_kernel_is_clean_including_bf16_variants():
+    assert precision_lint.lint_kernels() == []
+
+
+def test_both_cnn_backbones_traced_fwd_bwd_are_clean():
+    findings, allowlisted = precision_lint.lint_all()
+    assert findings == [], "\n".join(str(f) for f in findings)
+    assert allowlisted == []
+
+
+def test_narrow_variant_swaps_only_f32_arrays():
+    args = (S((4, 4), jnp.float32), S((4, 4), jnp.int8), S((), jnp.float32))
+    out = precision_lint.narrow_variant(args)
+    assert out[0].dtype == jnp.bfloat16
+    assert out[1].dtype == jnp.int8          # never touch integer codes
+    assert out[2].dtype == jnp.float32       # scalars keep their dtype
+
+
+# ---------------------------------------------------------------------------
+# accumulator-dtype intent registry
+# ---------------------------------------------------------------------------
+
+
+def test_intent_registry_covers_every_shipped_kernel():
+    from repro.kernels.dispatch import kernel_acc_dtypes, shipped_kernels
+    bases = {name.split("[")[0] for name in shipped_kernels()}
+    assert bases <= set(kernel_acc_dtypes())
+    assert all(v == "float32" for v in kernel_acc_dtypes().values())
+
+
+def test_missing_intent_declaration_is_a_finding(monkeypatch):
+    from repro.kernels import dispatch
+    slimmed = {k: v for k, v in dispatch.kernel_acc_dtypes().items()
+               if k != "flash_attention"}
+    monkeypatch.setattr(dispatch, "kernel_acc_dtypes", lambda: slimmed)
+    findings = precision_lint.lint_kernels()
+    assert any(f.rule == "acc-intent-missing"
+               and f.site.startswith("flash_attention") for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# allowlist-with-justification convention
+# ---------------------------------------------------------------------------
+
+
+def test_allowlist_entry_without_justification_raises():
+    with pytest.raises(ValueError, match="justification"):
+        precision_lint.check_allowlist({"some-site": ""})
+    with pytest.raises(ValueError, match="justification"):
+        precision_lint.check_allowlist({"some-site": "   "})
+
+
+def test_justified_allowlist_suppresses_matching_sites():
+    fn = partial(_broken_conv_grad_x_ref, k=3, stride=1, hp=10, wp=10)
+    res = analyze(fn, _GQ, _WQ, name="pr7-fixture")
+    findings = precision_lint._hazard_findings("fixture", res)
+    out, suppressed = precision_lint.split_findings(
+        findings, {"pr7-fixture": "deliberately re-broken PR 7 regression "
+                                  "for the lint's own test coverage"})
+    assert out == [] and len(suppressed) == len(findings)
+    # and without the allowlist everything surfaces
+    out2, sup2 = precision_lint.split_findings(findings, {})
+    assert len(out2) == len(findings) and sup2 == []

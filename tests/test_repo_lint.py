@@ -1,7 +1,10 @@
-"""Repo convention linter (analysis/repo_lint.py): pallas_call containment
-and REPRO_* env-read containment over src/repro."""
+"""Repo convention linter (analysis/repo_lint.py): pallas_call containment,
+REPRO_* env-read containment and host-sync containment over src/repro."""
+import pytest
+
 from repro.analysis import lint_repo
-from repro.analysis.repo_lint import lint_source
+from repro.analysis.repo_lint import (_HOST_SYNC_ALLOWED,
+                                      check_host_sync_allowlist, lint_source)
 
 
 def test_repo_is_clean():
@@ -42,3 +45,34 @@ def test_non_repro_env_and_mentions_are_not_flagged():
            'v = os.environ.get("XLA_FLAGS")\n'
            's = "REPRO_KERNEL_BACKEND"  # naming it is fine\n')
     assert lint_source(src, "repro/launch/mesh.py") == []
+
+
+def test_host_syncs_outside_training_are_flagged():
+    for src in ("import jax\nv = jax.device_get(x)\n",
+                "v = y.block_until_ready()\n",
+                "import numpy as np\nv = np.asarray(tracer)\n",
+                "import numpy as np\nv = np.array(tracer)\n"):
+        findings = lint_source(src, "repro/models/sneaky.py")
+        assert [f.rule for f in findings] == ["host-sync"], src
+
+
+def test_host_syncs_are_allowed_at_the_loop_boundary():
+    src = ("import jax\nimport numpy as np\n"
+           "v = np.asarray(jax.device_get(x))\n"
+           "w = y.block_until_ready()\n")
+    assert lint_source(src, "repro/training/trainer.py") == []
+    assert lint_source(src, "benchmarks/bench_smd.py") == []
+    assert lint_source(src, "examples/train_cifar.py") == []
+
+
+def test_host_sync_allowlist_entries_are_justified():
+    check_host_sync_allowlist()          # the shipped allowlist must pass
+    assert all(why.strip() for why in _HOST_SYNC_ALLOWED.values())
+    with pytest.raises(ValueError, match="justification"):
+        check_host_sync_allowlist({"repro/models/sneaky.py": ""})
+
+
+def test_allowlisted_module_may_sync():
+    src = "import jax\nv = jax.device_get(x)\n"
+    path = next(iter(_HOST_SYNC_ALLOWED))
+    assert lint_source(src, path) == []
