@@ -1,0 +1,333 @@
+"""PSG flash-attention backward vs the materialized (S, T) path.
+
+Two quantities per attention site of a paper-shaped LM, mirroring
+bench_conv's precedent:
+
+* **HBM attention bytes moved** — the quantity of record: wall time on
+  the CPU Pallas interpreter is not TPU-representative, but which
+  tensors each path streams through HBM is a property of the
+  dispatch/BlockSpec structure and is computed exactly below;
+* **wall time** of a jitted forward+backward on both paths (CPU
+  interpreter trend only, clearly labeled).
+
+The byte accounting covers the WHOLE attention step per path in two
+named directions (``assert_complete`` enforces that every path reports
+both and that the totals reconcile — ``run.py --json-attn`` exits
+nonzero otherwise):
+
+``fwd``   forward traffic.  The materialized path writes+reads the
+          (B, nh, S, T) fp32 score tensor and the bf16 probability
+          tensor (models/layers ``_softmax_lowp``); the flash kernel
+          streams K/V tiles (each causal run-tile re-read per query
+          block) and never materializes an (S, T) tensor — it
+          additionally writes the (B, nh, S) fp32 lse rows the backward
+          recomputes from.
+``bwd``   backward traffic.  The materialized path re-reads the saved
+          bf16 probabilities and writes+reads two more (S, T) fp32
+          tensors (dP = do·vᵀ and dS); the flash backward re-reads
+          operand tiles per causal run-tile across its dq and dkv
+          kernel passes and writes the four per-query-head fp32 PSG
+          code products (MSB/full × dv/dk) that the group-sum +
+          Eq. (2) select consumes (kernels/ops.flash_attention_bwd).
+
+Operand dtype matters and is part of the shape record: the flash path's
+dominant term is K/V (and q/do) tile re-reads at the OPERAND width,
+while the materialized path's (S, T) score/dP/dS tensors are fp32
+regardless (softmax/grad precision) — so the ratio is ~2.5x at fp32
+operands and >3.5x at the bf16 operands the paper-shaped LM trains
+with (the ``flash_attention[bf16]``/``flash_bwd_*[bf16]`` registry
+entries).  The acceptance quantity is ``bytes_ratio`` on
+``paper_lm_s4096`` — whole-step (fwd + bwd) materialized / flash, which
+must stay >= 3x.
+
+``attn_json`` additionally records a CPU-interpreter LM training A/B
+with ``fused_attention`` on/off, including the measured
+``psg_fallback_ratio`` the attention backward feeds the EnergyLedger.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+from repro.kernels.flash_attn import DEFAULT_BK, DEFAULT_BQ
+
+FP32 = 4
+BF16 = 2
+
+#: every path's accounting must report exactly these traffic directions
+#: (plus optional informational extras).
+REQUIRED_COMPONENTS = ("fwd", "bwd")
+
+
+class IncompleteAccountingError(RuntimeError):
+    """An attention path's byte accounting is missing a direction."""
+
+
+def assert_complete(acct: Dict[str, int], path: str) -> None:
+    """Fail loudly if ``acct`` omits a traffic direction or its total
+    does not reconcile with the components (run.py --json-attn gate)."""
+    missing = [c for c in REQUIRED_COMPONENTS if not acct.get(c, 0) > 0]
+    if missing:
+        raise IncompleteAccountingError(
+            f"{path}: byte accounting incomplete — missing/zero "
+            f"components {missing} (have {sorted(acct)})")
+    if acct.get("total") != sum(acct[c] for c in REQUIRED_COMPONENTS):
+        raise IncompleteAccountingError(
+            f"{path}: total {acct.get('total')} != sum of "
+            f"{REQUIRED_COMPONENTS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnShape:
+    """One self-attention site: GQA geometry + operand width."""
+    batch: int
+    seq: int
+    heads: int
+    kv_heads: int
+    head_dim: int
+    causal: bool = True
+    op_bytes: int = BF16          # operand (q/k/v/do) element width
+    kind: str = "lm"
+
+    @property
+    def q_elems(self) -> int:
+        return self.batch * self.seq * self.heads * self.head_dim
+
+    @property
+    def kv_elems(self) -> int:
+        return self.batch * self.seq * self.kv_heads * self.head_dim
+
+    @property
+    def st_elems(self) -> int:
+        """(B, nh, S, T) score-tensor element count (T = S here)."""
+        return self.batch * self.heads * self.seq * self.seq
+
+    @property
+    def rows_elems(self) -> int:
+        """One (B, nh, S) fp32 row statistic (lse / delta)."""
+        return self.batch * self.heads * self.seq
+
+
+def _run_tiles(s: AttnShape, bq: int = DEFAULT_BQ,
+               bk: int = DEFAULT_BK) -> int:
+    """Exact count of (iq, ikv) tile pairs the causal block-skip runs
+    (kernels/flash_attn: ``ik*bk <= iq*bq + bq - 1``), times B*nh —
+    each query head streams its OWN pass over its group's K/V tiles."""
+    n_q = -(-s.seq // bq)
+    n_kv = -(-s.seq // bk)
+    if s.causal:
+        pairs = sum(1 for iq in range(n_q) for ik in range(n_kv)
+                    if ik * bk <= iq * bq + bq - 1)
+    else:
+        pairs = n_q * n_kv
+    return s.batch * s.heads * pairs
+
+
+def materialized_bytes(s: AttnShape) -> Dict[str, int]:
+    """Whole-step HBM traffic of the materialized (S, T) path.
+
+    Scores, dP and dS are fp32 (softmax/grad precision) regardless of
+    operand dtype; the probability tensor is the bf16 residual
+    ``_softmax_lowp`` saves for the backward.
+    """
+    op = s.op_bytes
+    fwd = ((s.q_elems + 2 * s.kv_elems) * op        # read q, k, v
+           + 2 * s.st_elems * FP32                  # write+read scores
+           + 2 * s.st_elems * BF16                  # write+read probs
+           + s.q_elems * op)                        # write o
+    bwd = (s.st_elems * BF16                        # re-read saved probs
+           + 2 * s.st_elems * FP32                  # write+read dP = do.vT
+           + 2 * s.st_elems * FP32                  # write+read dS
+           + (2 * s.q_elems + 2 * s.kv_elems) * op  # read do, q, k, v
+           + (s.q_elems + 2 * s.kv_elems) * FP32)   # write dq, dk, dv
+    return {"fwd": fwd, "bwd": bwd, "total": fwd + bwd}
+
+
+def flash_bytes(s: AttnShape, bq: int = DEFAULT_BQ,
+                bk: int = DEFAULT_BK) -> Dict[str, int]:
+    """Whole-step HBM traffic of the flash + PSG-backward path.
+
+    No (S, T) tensor exists in either direction; the dominant term is
+    operand tile re-reads — one K/V (fwd + dq pass) or q/do (dkv pass)
+    tile read per causal run-tile per query head.  The dkv pass's four
+    per-query-head fp32 code products (kernels/ops group-sums them over
+    each GQA group before the Eq. (2) select) are charged explicitly.
+    """
+    op = s.op_bytes
+    tiles = _run_tiles(s, bq, bk)
+    tile_kv = tiles * bk * s.head_dim               # one K (or V) tile stream
+    tile_q = tiles * bq * s.head_dim                # one q (or do) tile stream
+    prods = s.batch * s.seq * s.heads * s.head_dim  # one per-query-head product
+    group = s.batch * s.seq * s.kv_heads * s.head_dim
+    fwd = (s.q_elems * op                           # read q once per block row
+           + 2 * tile_kv * op                       # K/V per run-tile
+           + s.q_elems * op                         # write o
+           + s.rows_elems * FP32)                   # write lse rows
+    bwd = (  # delta = sum(o * do) row statistic
+           2 * s.q_elems * op + s.rows_elems * FP32
+           # dq pass: q/do/rows resident per block row, K/V per run-tile
+           + 2 * s.q_elems * op + 2 * tile_kv * op
+           + 2 * s.rows_elems * FP32 + s.q_elems * FP32
+           # scale pass reads q/do/v row norms
+           + (s.q_elems * 2 + s.kv_elems) * op
+           # dkv pass: K/V resident per kv block, q/do per run-tile
+           + 2 * s.kv_elems * op + 2 * tile_q * op + 2 * s.rows_elems * FP32
+           # four per-query-head code products: write, group-sum read,
+           # grouped write, Eq.(2)-select read, dk/dv write
+           + 4 * prods * FP32 + 4 * prods * FP32
+           + 4 * group * FP32 + 4 * group * FP32 + 2 * s.kv_elems * FP32)
+    return {"fwd": fwd, "bwd": bwd, "total": fwd + bwd}
+
+
+def _ratios(b_mat: Dict[str, int], b_flash: Dict[str, int]) -> Dict:
+    return {"bytes_ratio": b_mat["total"] / b_flash["total"],
+            "fwd_bytes_ratio": b_mat["fwd"] / b_flash["fwd"],
+            "bwd_bytes_ratio": b_mat["bwd"] / b_flash["bwd"]}
+
+
+#: paper-shaped LM attention site: llama-class bf16 GQA geometry.
+PAPER_LM = AttnShape(batch=8, seq=4096, heads=32, kv_heads=8, head_dim=128,
+                     causal=True, op_bytes=BF16, kind="paper_lm")
+
+
+def _paper_totals(layers: int = 32) -> Dict:
+    """Per-training-step attention-byte totals over every layer of the
+    paper-shaped LM — the acceptance quantity is ``bytes_ratio``
+    (whole step, fwd + bwd, must stay >= 3x)."""
+    b_mat = {c: materialized_bytes(PAPER_LM)[c] * layers
+             for c in (*REQUIRED_COMPONENTS, "total")}
+    b_flash = {c: flash_bytes(PAPER_LM)[c] * layers
+               for c in (*REQUIRED_COMPONENTS, "total")}
+    assert_complete(b_mat, "materialized/paper_totals")
+    assert_complete(b_flash, "flash/paper_totals")
+    return {"batch": PAPER_LM.batch, "seq": PAPER_LM.seq,
+            "heads": PAPER_LM.heads, "kv_heads": PAPER_LM.kv_heads,
+            "head_dim": PAPER_LM.head_dim, "layers": layers,
+            "operand_dtype": "bfloat16",
+            "materialized_bytes_per_step": b_mat,
+            "flash_bytes_per_step": b_flash,
+            **_ratios(b_mat, b_flash)}
+
+
+def _shape_rows(fast: bool) -> List[Dict]:
+    """Timed fwd+bwd A/B per small GQA shape (CPU interpreter) plus the
+    exact byte model for the same geometry at both operand widths."""
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import time_us as _time
+    from repro.core import psg
+    from repro.core.config import PSGConfig
+    from repro.kernels.ref import flash_attention_oracle
+
+    cfg = PSGConfig(enabled=True, fused_attention=True)
+    shapes = [AttnShape(1, 128, 4, 2, 32, kind="gqa_small"),
+              AttnShape(1, 256, 4, 2, 64, kind="gqa_body")]
+    if fast:
+        shapes = shapes[:1]
+
+    rows = []
+    for s in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(s.seq + s.head_dim), 4)
+        q = jax.random.normal(ks[0], (s.batch, s.seq, s.heads, s.head_dim))
+        k = jax.random.normal(ks[1], (s.batch, s.seq, s.kv_heads, s.head_dim))
+        v = jax.random.normal(ks[2], (s.batch, s.seq, s.kv_heads, s.head_dim))
+        gy = jax.random.normal(
+            ks[3], (s.batch, s.seq, s.heads, s.head_dim)) * 0.01
+
+        def mat_loss(q_, k_, v_):
+            return jnp.sum(flash_attention_oracle(q_, k_, v_,
+                                                  causal=s.causal) * gy)
+
+        def flash_loss(q_, k_, v_):
+            with psg.enable(cfg):
+                return jnp.sum(psg.attention(q_, k_, v_,
+                                             causal=s.causal) * gy)
+
+        us_mat, _ = _time(jax.jit(jax.grad(mat_loss, argnums=(0, 1, 2))),
+                          q, k, v)
+        us_flash, _ = _time(jax.jit(jax.grad(flash_loss, argnums=(0, 1, 2))),
+                            q, k, v)
+        b_mat = materialized_bytes(s)
+        b_flash = flash_bytes(s)
+        assert_complete(b_mat, f"materialized/{s.kind}")
+        assert_complete(b_flash, f"flash/{s.kind}")
+        rows.append({
+            "batch": s.batch, "seq": s.seq, "heads": s.heads,
+            "kv_heads": s.kv_heads, "head_dim": s.head_dim,
+            "causal": s.causal, "kind": s.kind,
+            "us_materialized_cpu_interpret": us_mat,
+            "us_flash_cpu_interpret": us_flash,
+            "materialized_bytes": b_mat,
+            "flash_bytes": b_flash,
+            **_ratios(b_mat, b_flash),
+            "bytes_ratio_f32_operands": _ratios(
+                materialized_bytes(dataclasses.replace(s, op_bytes=FP32)),
+                flash_bytes(dataclasses.replace(s, op_bytes=FP32)),
+            )["bytes_ratio"],
+        })
+    return rows
+
+
+def _train_proxy(fast: bool) -> Dict:
+    """Measured steps/s of a short CPU LM training A/B with
+    ``fused_attention`` on/off, plus the measured attention-backward
+    fallback ratio the fused path feeds ``energy_report()``.  The Pallas
+    interpreter executes the flash kernels here, so this is a
+    loop-plumbing check, NOT a hardware speed claim — the byte totals
+    above are the quantity of record (module docstring)."""
+    import time as _t
+
+    from benchmarks.common import final_loss, run_lm
+    from repro.core.config import E2TrainConfig, PSGConfig
+
+    steps = 3 if fast else 8
+    out: Dict = {"steps": steps,
+                 "note": "CPU Pallas-interpreter proxy; the byte ratios are "
+                         "the quantity of record"}
+    for label, fused in (("materialized", False), ("flash", True)):
+        e2 = E2TrainConfig(psg=PSGConfig(enabled=True, swa=False,
+                                         fused_attention=fused))
+        t0 = _t.perf_counter()
+        hist, tr, _ = run_lm(e2, steps, optimizer="psg", lr=0.05)
+        out[f"{label}_steps_per_s"] = steps / (_t.perf_counter() - t0)
+        out[f"{label}_final_loss"] = final_loss(hist, k=2)
+        if fused:
+            fb = tr.measured_psg_fallback()
+            out["psg_fallback_ratio_measured"] = (
+                None if fb is None else float(fb))
+            rep = tr.energy_report(steps=steps)
+            out["comp_saving_measured"] = rep.computational_savings_measured
+    return out
+
+
+def attn_json(fast: bool = True) -> dict:
+    """The BENCH_attn.json record (CI artifact).  Raises
+    :class:`IncompleteAccountingError` if any path omits a traffic
+    direction — run.py --json-attn turns that into a nonzero exit."""
+    return {"paper_lm_s4096": _paper_totals(),
+            "shapes": _shape_rows(fast),
+            "train_proxy_cpu_interpret": _train_proxy(fast)}
+
+
+def run(fast: bool = True):
+    """CSV rows for benchmarks/run.py."""
+    from benchmarks.common import csv_row
+    totals = _paper_totals()
+    yield csv_row(
+        "attn/paper_lm_s4096",
+        0.0,
+        f"bytes_ratio={totals['bytes_ratio']:.2f};"
+        f"fwd_bytes_ratio={totals['fwd_bytes_ratio']:.2f};"
+        f"bwd_bytes_ratio={totals['bwd_bytes_ratio']:.2f};"
+        f"materialized_GB={totals['materialized_bytes_per_step']['total']/1e9:.2f};"
+        f"flash_GB={totals['flash_bytes_per_step']['total']/1e9:.2f}")
+    for r in _shape_rows(fast):
+        yield csv_row(
+            f"attn/{r['kind']}/{r['batch']}x{r['seq']}x{r['heads']}-"
+            f"{r['kv_heads']}h{r['head_dim']}",
+            r["us_flash_cpu_interpret"],
+            f"materialized_us={r['us_materialized_cpu_interpret']:.1f};"
+            f"bytes_ratio={r['bytes_ratio']:.2f};"
+            f"bwd_bytes_ratio={r['bwd_bytes_ratio']:.2f}")

@@ -63,18 +63,32 @@ def run(fast: bool = True) -> List[str]:
             f"ref_us={us_ref:.1f};k={c.k};stride={c.stride};"
             f"fallback_tile_ratio={float(fb):.3f}"))
 
-    # flash attention vs unfused oracle (interpret mode; derived column
-    # reports the HBM-traffic ratio O(S*d)/O(S*T) that matters on TPU)
+    # flash attention vs unfused oracle, BOTH directions (interpret mode;
+    # the derived column reports the two-direction HBM byte model from
+    # bench_attn — the quantity that matters on TPU).  The backward is the
+    # PSG flash backward (recompute dq + dual-accumulator dkv kernels).
+    from benchmarks.bench_attn import (AttnShape, FP32, flash_bytes,
+                                       materialized_bytes)
+    from repro.kernels import ops
     from repro.kernels.flash_attn import flash_attention
     from repro.kernels.ref import flash_attention_oracle
     B, S, nh, hd = (1, 256, 4, 64) if fast else (2, 1024, 8, 128)
-    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
     q = jax.random.normal(ks[0], (B, S, nh, hd))
     kk = jax.random.normal(ks[1], (B, S, nh, hd))
     vv = jax.random.normal(ks[2], (B, S, nh, hd))
-    us_f, _ = _time(lambda a, b, c: flash_attention(a, b, c, bq=128, bk=128),
-                    q, kk, vv)
+    do = jax.random.normal(ks[3], (B, S, nh, hd)) * 0.01
+    us_f, (o, lse) = _time(
+        lambda a, b, c: ops.flash_attention_fwd(a, b, c), q, kk, vv)
     us_o, _ = _time(flash_attention_oracle, q, kk, vv)
-    rows.append(csv_row("kernel/flash_attn", us_f,
-                        f"oracle_us={us_o:.1f};hbm_ratio={hd/S:.4f}"))
+    us_b, _ = _time(
+        lambda a, b, c, d: ops.flash_attention_bwd(a, b, c, o, lse, d, cfg),
+        q, kk, vv, do)
+    shape = AttnShape(B, S, nh, nh, hd, op_bytes=FP32, kind="bench")
+    b_mat, b_flash = materialized_bytes(shape), flash_bytes(shape)
+    rows.append(csv_row(
+        "kernel/flash_attn", us_f,
+        f"oracle_us={us_o:.1f};bwd_us={us_b:.1f};"
+        f"flash_MB_fwd_bwd={b_flash['total']/1e6:.1f};"
+        f"hbm_bytes_ratio={b_mat['total'] / b_flash['total']:.2f}"))
     return rows

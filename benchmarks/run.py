@@ -20,6 +20,14 @@ per-shape rows and a CPU proxy steps/s A/B (benchmarks/bench_conv.py).
 Both traffic directions (fwd/bwd x-side AND the dx side) are counted per
 path; exits nonzero if any path's byte accounting is incomplete.
 
+``--json-attn [PATH]`` (default ``BENCH_attn.json``) records the
+flash-attention trajectory: PSG flash backward vs materialized (S, T)
+path attention bytes moved per training step on the paper-shaped LM
+config, per-shape rows and a CPU proxy LM A/B with the measured
+attention-backward fallback ratio (benchmarks/bench_attn.py).  Both
+traffic directions are counted per path; exits nonzero if any path's
+byte accounting is incomplete.
+
 ``--json-audit [PATH]`` (default ``BENCH_audit.json``) records the static
 cost audit: per-layer CostModel vs jaxpr vs compiled-HLO reconciliation
 for the paper backbones and the smoke LM, plus the full lint battery —
@@ -89,8 +97,8 @@ def main(argv=None) -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (smd,slu,psg,e2train,"
-                         "cnn,convergence,kernels,throughput,roofline,"
-                         "audit)")
+                         "cnn,convergence,kernels,conv,attn,throughput,"
+                         "roofline,audit)")
     ap.add_argument("--json", nargs="?", const="BENCH_energy.json",
                     default=None, metavar="PATH",
                     help="write the EnergyReport trajectory record to PATH "
@@ -106,6 +114,12 @@ def main(argv=None) -> None:
                     help="write the fused-conv record (implicit-GEMM vs "
                          "im2col: activation bytes moved + CPU proxy "
                          "steps/s) to PATH and exit (skips the CSV benches)")
+    ap.add_argument("--json-attn", nargs="?", const="BENCH_attn.json",
+                    default=None, metavar="PATH",
+                    help="write the flash-attention record (PSG flash "
+                         "backward vs materialized path: attention bytes "
+                         "moved + CPU proxy steps/s + measured fallback) to "
+                         "PATH and exit (skips the CSV benches)")
     ap.add_argument("--json-audit", nargs="?", const="BENCH_audit.json",
                     default=None, metavar="PATH",
                     help="write the static cost-audit record (CostModel vs "
@@ -115,7 +129,7 @@ def main(argv=None) -> None:
     fast = not args.full
 
     if args.json or args.json_throughput or args.json_conv \
-            or args.json_audit:                              # write all given
+            or args.json_attn or args.json_audit:            # write all given
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(energy_json(fast=fast), f, indent=2)
@@ -137,6 +151,18 @@ def main(argv=None) -> None:
             with open(args.json_conv, "w") as f:
                 json.dump(record, f, indent=2)
             print(f"wrote {args.json_conv}", file=sys.stderr)
+        if args.json_attn:
+            from benchmarks.bench_attn import (IncompleteAccountingError,
+                                               attn_json)
+            try:
+                record = attn_json(fast=fast)
+            except IncompleteAccountingError as e:
+                print(f"attention byte accounting incomplete: {e}",
+                      file=sys.stderr)
+                sys.exit(1)
+            with open(args.json_attn, "w") as f:
+                json.dump(record, f, indent=2)
+            print(f"wrote {args.json_attn}", file=sys.stderr)
         if args.json_audit:
             from benchmarks.bench_audit import audit_json
             record = audit_json(fast=fast)
@@ -154,7 +180,7 @@ def main(argv=None) -> None:
                 sys.exit(1)
         return
 
-    from benchmarks import (bench_audit, bench_cnn, bench_conv,
+    from benchmarks import (bench_attn, bench_audit, bench_cnn, bench_conv,
                             bench_convergence, bench_e2train, bench_kernels,
                             bench_psg, bench_slu, bench_smd,
                             bench_throughput, roofline)
@@ -168,6 +194,7 @@ def main(argv=None) -> None:
         "convergence": bench_convergence.run,  # Fig. 5
         "kernels": bench_kernels.run,
         "conv": bench_conv.run,         # §Kernels (implicit-GEMM vs im2col)
+        "attn": bench_attn.run,         # §Kernels (PSG flash bwd vs (S,T))
         "throughput": bench_throughput.run,  # §Loop (chunked vs per-step)
         "roofline": roofline.run,       # §Roofline (from dry-run artifact)
         "audit": bench_audit.run,       # §Analysis (static cost audit)

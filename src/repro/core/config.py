@@ -261,6 +261,17 @@ class PSGConfig:
     # (the frozen config is a static jit argument, so the selection is
     # jit-cache-correct); resolution lives in core/psg.fused_conv_active.
     fused_conv: Optional[bool] = None
+    # Route transformer self-attention through the flash Pallas kernels
+    # (kernels/flash_attn.py): forward streams KV tiles through VMEM and
+    # the backward recomputes probability tiles from the logsumexp
+    # residual, with the PSG predictor applied to the dk/dv contractions —
+    # no (S, T) tensor in HBM in either direction (DESIGN.md §Kernels).
+    # None (the default) = auto: fused on the reference/interpret
+    # backends, the materialized/chunked softmax paths on Mosaic (same
+    # opt-in-pending-TPU-profile posture as fused_conv).  Explicit
+    # True/False pins it per-experiment; resolution lives in
+    # core/psg.fused_attention_active.
+    fused_attention: Optional[bool] = None
 
 
 @dataclass(frozen=True)

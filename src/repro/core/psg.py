@@ -231,6 +231,81 @@ def _psg_conv2d_bwd_impl(k, stride, cfg, res, gy):
 _psg_conv2d.defvjp(_psg_conv2d_fwd, _psg_conv2d_bwd)
 
 
+# ---------------------------------------------------------------------------
+# fused flash attention with PSG dk/dv backward (PSGConfig.fused_attention)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _psg_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   probe: jnp.ndarray, causal: bool,
+                   cfg: PSGConfig) -> jnp.ndarray:
+    """Self-attention ``(B, S, nh, hd) x (B, T, nkv, hd)`` with PSG
+    backward semantics; no (S, T) tensor in HBM in either direction.
+
+    Forward is the flash kernel (dispatch layer); the backward recomputes
+    probability tiles from the logsumexp residual — fp32 dq, and the
+    Eq. (2) MSB-predictor/fallback treatment on the dk/dv contractions.
+    ``probe`` is the shared fallback-stats carrier (module docstring):
+    attention MACs land in the same MAC-weighted ratio as the matmul/conv
+    PSG ops.
+    """
+    o, _ = dispatch.attention_fwd(q, k, v, cfg, causal=causal)
+    return o
+
+
+def _psg_attention_fwd(q, k, v, probe, causal, cfg):
+    o, lse = dispatch.attention_fwd(q, k, v, cfg, causal=causal)
+    return o, (q, k, v, o, lse)
+
+
+def _psg_attention_bwd(causal, cfg, res, gy):
+    # precision: scope — origin tag for analysis/dataflow.py (see _psg_bwd)
+    with jax.named_scope("precision:psg_attention_bwd"):
+        return _psg_attention_bwd_impl(causal, cfg, res, gy)
+
+
+def _psg_attention_bwd_impl(causal, cfg, res, gy):
+    q, k, v, o, lse = res
+    dq, dk, dv, fallback = dispatch.attention_bwd(q, k, v, o, lse, gy, cfg,
+                                                  causal=causal)
+    B, S, nh, hd = q.shape
+    T = k.shape[1]
+    # score pairs actually computed (causal self-attention: the upper
+    # triangle is skipped); x2 for the dv and dk contractions
+    pairs = S * (S + 1) // 2 if (causal and S == T) else S * T
+    macs = jnp.float32(2 * B * nh * hd) * pairs
+    dprobe = jnp.stack([fallback * macs, macs])
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), dprobe
+
+
+_psg_attention.defvjp(_psg_attention_fwd, _psg_attention_bwd)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True) -> jnp.ndarray:
+    """Public fused-attention entry point; picks up the active PSG config
+    and stats probe.  Callers gate on :func:`fused_attention_active`."""
+    cfg = active_config()
+    return _psg_attention(q, k, v, _current_probe(), causal, cfg)
+
+
+def fused_attention_active(cfg: Optional[PSGConfig]) -> bool:
+    """Resolve a config's ``fused_attention`` selection at trace time.
+
+    Mirrors :func:`fused_conv_active`: explicit ``True``/``False`` wins;
+    the default (``None`` = auto) runs the flash kernels on the
+    reference/interpret backends and keeps the materialized/chunked
+    softmax paths on Mosaic, which stays opt-in pending a real-TPU
+    profile (ROADMAP "Finish the Pallas kernel story").
+    """
+    if cfg is None:
+        return False
+    if cfg.fused_attention is not None:
+        return cfg.fused_attention
+    return dispatch.resolve_backend(cfg) != dispatch.BACKEND_MOSAIC
+
+
 def fused_conv_active(cfg: Optional[PSGConfig]) -> bool:
     """Resolve a config's ``fused_conv`` selection at trace time.
 

@@ -208,6 +208,44 @@ def conv_grad_w(xp: jnp.ndarray, gy: jnp.ndarray, cfg: PSGConfig,
                            interpret=backend != BACKEND_MOSAIC)
 
 
+def attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  cfg: Optional[PSGConfig], *, causal: bool = True
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused attention forward: ``(o, lse)`` with lse (B, nh, S) fp32.
+
+    Flash Pallas kernel on the interpret/mosaic backends (O(S·d) HBM
+    traffic, lse emitted from the same pass); materialized softmax oracle
+    + direct logsumexp on the reference backend.  Either way the lse is
+    the only residual the backward needs beyond the operands.
+    """
+    backend = resolve_backend(cfg)
+    if backend == BACKEND_REFERENCE:
+        o = ref.flash_attention_oracle(q, k, v, causal).astype(q.dtype)
+        return o, ref.attention_lse_ref(q, k, causal)
+    return ops.flash_attention_fwd(q, k, v, causal=causal,
+                                   interpret=backend != BACKEND_MOSAIC)
+
+
+def attention_bwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  o: jnp.ndarray, lse: jnp.ndarray, do: jnp.ndarray,
+                  cfg: PSGConfig, *, causal: bool = True):
+    """PSG attention backward: ``(dq, dk, dv, fallback_ratio)``.
+
+    Recomputed-tile Pallas kernels on the interpret/mosaic backends
+    (fp32 dq; dual MSB/full code-product accumulators for dk/dv with the
+    Eq. (2) select applied on the group-summed kv-head products — fallback
+    ratio = fraction of (bk x hd) kv-tiles that needed the full product);
+    element level on the reference backend (materialized probabilities,
+    same select, element-granularity tiles).  Both ratios are in [0, 1]
+    and feed the same probe -> energy channel as the matmul/conv PSG ops.
+    """
+    backend = resolve_backend(cfg)
+    if backend == BACKEND_REFERENCE:
+        return ref.psg_attention_bwd_ref(q, k, v, do, cfg, causal)
+    return ops.flash_attention_bwd(q, k, v, o, lse, do, cfg, causal=causal,
+                                   interpret=backend != BACKEND_MOSAIC)
+
+
 # ---------------------------------------------------------------------------
 # shipped-kernel registry — the kernel linter's worklist
 # ---------------------------------------------------------------------------
@@ -264,9 +302,19 @@ def shipped_kernels() -> Dict[str, Tuple[Callable, tuple]]:
     xm, gm = S((1024, 256), i8), S((1024, 256), i8)
     xq, gq = S((1024, 256), i8), S((1024, 256), i16)
     tau = S((), f32)
-    # attention operands: S=256 (2 q-blocks, 2 kv-blocks), GQA 4->2 heads
+    # attention operands: S=256 (2 q-blocks, 2 kv-blocks), GQA 4->2 heads.
+    # Registered at BOTH fp32 and the model's real bf16 activation dtype —
+    # the bf16 rows make precision_lint's narrowed probe exercise the
+    # attention kernels with narrow operands instead of skipping them
+    # (lse/delta stay fp32, matching the forward's residual contract).
+    bf16 = jnp.bfloat16
     q = S((2, 256, 4, 128), f32)
     kv = S((2, 256, 2, 128), f32)
+    qb = S((2, 256, 4, 128), bf16)
+    kvb = S((2, 256, 2, 128), bf16)
+    rows = S((2, 4, 256), f32)              # lse / delta residual rows
+    scales6 = S((6,), f32)
+    lims = (127.0, 7.0, 32767.0, 511.0)     # default PSGConfig code limits
     entries: Dict[str, Tuple[Callable, tuple]] = {
         "psg_grad_w_pallas": (
             lambda a, b, c, d, t: psg_matmul.psg_grad_w_pallas(
@@ -283,6 +331,30 @@ def shipped_kernels() -> Dict[str, Tuple[Callable, tuple]]:
             functools.partial(flash_attn.flash_attention, causal=True,
                               interpret=True),
             (q, kv, kv)),
+        "flash_attention[lse]": (
+            functools.partial(flash_attn.flash_attention, causal=True,
+                              interpret=True, return_lse=True),
+            (q, kv, kv)),
+        "flash_attention[bf16]": (
+            functools.partial(flash_attn.flash_attention, causal=True,
+                              interpret=True, return_lse=True),
+            (qb, kvb, kvb)),
+        "flash_bwd_dq_pallas": (
+            functools.partial(flash_attn.flash_bwd_dq_pallas, causal=True,
+                              interpret=True),
+            (q, kv, kv, q, rows, rows)),
+        "flash_bwd_dq_pallas[bf16]": (
+            functools.partial(flash_attn.flash_bwd_dq_pallas, causal=True,
+                              interpret=True),
+            (qb, kvb, kvb, qb, rows, rows)),
+        "flash_bwd_dkv_pallas": (
+            functools.partial(flash_attn.flash_bwd_dkv_pallas, lims=lims,
+                              causal=True, interpret=True),
+            (q, kv, kv, q, rows, rows, scales6)),
+        "flash_bwd_dkv_pallas[bf16]": (
+            functools.partial(flash_attn.flash_bwd_dkv_pallas, lims=lims,
+                              causal=True, interpret=True),
+            (qb, kvb, kvb, qb, rows, rows, scales6)),
     }
     B = 4
     for kind, (k, s, hw, cin, cout) in conv_lint_geometries().items():
@@ -329,6 +401,8 @@ def kernel_acc_dtypes() -> Dict[str, str]:
         "predictor_matmul_pallas": "float32",
         "quantize_pallas": "float32",
         "flash_attention": "float32",
+        "flash_bwd_dq_pallas": "float32",
+        "flash_bwd_dkv_pallas": "float32",
         "conv_fwd_pallas": "float32",
         "conv_grad_w_predictor_pallas": "float32",
         "conv_grad_w_pallas": "float32",

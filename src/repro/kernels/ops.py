@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.core.config import PSGConfig
 from repro.core.quant import qscale
 from repro.kernels import conv as _cv
+from repro.kernels import flash_attn as _fa
 from repro.kernels import psg_matmul as _pm
 from repro.kernels import quant as _q
 
@@ -127,3 +128,62 @@ def conv_grad_w(xp: jnp.ndarray, gy: jnp.ndarray, cfg: PSGConfig,
         xm_c, gm_c, xq_c, gq_c, tau_codes, k=k, stride=stride,
         interpret=interpret)
     return sign_i8.astype(jnp.float32), jnp.mean(stats.astype(jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, interpret: bool = True
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Flash attention forward + the logsumexp residual.
+
+    q: (B, S, nh, hd); k/v: (B, T, nkv, hd).  Returns (o, lse) with
+    lse (B, nh, S) fp32 — the only extra residual the recomputed-tile
+    backward needs; no (S, T) tensor touches HBM.
+    """
+    return _fa.flash_attention(q, k, v, causal=causal, interpret=interpret,
+                               return_lse=True)
+
+
+@partial(jax.jit, static_argnames=("cfg", "causal", "interpret"))
+def flash_attention_bwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        o: jnp.ndarray, lse: jnp.ndarray, do: jnp.ndarray,
+                        cfg: PSGConfig, causal: bool = True,
+                        interpret: bool = True):
+    """PSG flash-attention backward: (dq, dk, dv, fallback_tile_ratio).
+
+    dq comes from the plain fp32 recompute kernel.  dk/dv come from the
+    dual-accumulator PSG kernel: per-query-head MSB and full code
+    products, group-summed here to kv heads, then the Eq. (2) select
+    (predictor value where ``|g_msb| >= beta*max|g_msb|``, dequantized
+    full product elsewhere) — the finish stage hoisted out of the kernel
+    because a Pallas grid step cannot reduce across query heads (see
+    flash_attn.py's GQA note).  The fallback ratio counts (bk x hd)
+    kv-tiles of the dk/dv outputs that contain any fallback element —
+    the tile granularity the energy model charges full-precision MACs at.
+    """
+    B, S, nh, hd = q.shape
+    T, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    do32 = do.astype(jnp.float32)
+    delta = jnp.einsum("bsnh,bsnh->bns", do32, o.astype(jnp.float32))
+    dq = _fa.flash_bwd_dq_pallas(q, k, v, do, lse, delta, causal=causal,
+                                 interpret=interpret)
+    scales = _fa.attention_psg_scales(
+        q, v, do, delta, bits_x=cfg.bits_x, bits_x_msb=cfg.bits_x_msb,
+        bits_g=cfg.bits_g, bits_g_msb=cfg.bits_g_msb)
+    lims = (_fa.qlim(cfg.bits_x), _fa.qlim(cfg.bits_x_msb),
+            _fa.qlim(cfg.bits_g), _fa.qlim(cfg.bits_g_msb))
+    parts = _fa.flash_bwd_dkv_pallas(q, k, v, do, lse, delta, scales,
+                                     lims=lims, causal=causal,
+                                     interpret=interpret)
+    # group-sum the per-query-head code products to kv heads (identical
+    # jnp.sum in the oracle keeps the products bit-aligned)
+    dv_m, dv_f, dk_m, dk_f = (
+        p.reshape(B, T, nkv, g, hd).sum(axis=3) for p in parts)
+    s_q, s_qm, s_do, s_dom, s_ds, s_dsm = scales
+    lim_x, lim_xm = lims[0], lims[1]
+    dv, r_dv = _fa.psg_attention_select(dv_m, dv_f, (1.0 / lim_xm) * s_dom,
+                                        (1.0 / lim_x) * s_do, cfg.beta)
+    dk, r_dk = _fa.psg_attention_select(dk_m, dk_f, s_dsm * s_qm,
+                                        s_ds * s_q, cfg.beta)
+    return dq, dk, dv, 0.5 * (r_dv + r_dk)

@@ -161,3 +161,173 @@ def flash_attention_oracle(q, gk, gv, causal: bool = True):
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bnsgt,btnh->bsngh", w, gv.astype(jnp.float32))
     return o.reshape(B, S, nh, hd)
+
+
+# ---------------------------------------------------------------------------
+# attention backward oracles (flash_attn.py's recomputed-tile kernels)
+# ---------------------------------------------------------------------------
+
+
+def _attn_scores_ref(q, gk, causal: bool):
+    """Masked fp32 scores per query head, (B, nkv, S, g, T)."""
+    import math
+    B, S, nh, hd = q.shape
+    T, nkv = gk.shape[1], gk.shape[2]
+    g = nh // nkv
+    qf = q.reshape(B, S, nkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bsngh,btnh->bnsgt", qf,
+                   gk.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        m = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(m[None, None, :, None, :], s, -1e30)
+    return s
+
+
+def attention_lse_ref(q, gk, causal: bool = True) -> jnp.ndarray:
+    """Per-row logsumexp of the masked scores, (B, nh, S) fp32 — the
+    residual the flash forward emits with ``return_lse=True``."""
+    s = _attn_scores_ref(q, gk, causal)            # (B, nkv, S, g, T)
+    lse = jax.nn.logsumexp(s, axis=-1)             # (B, nkv, S, g)
+    B, nkv, S, g = lse.shape
+    return jnp.moveaxis(lse, 2, 3).reshape(B, nkv * g, S)
+
+
+def flash_attention_vjp_oracle(q, gk, gv, do, causal: bool = True):
+    """fp32 (dq, dk, dv) — plain autodiff of the materialized oracle."""
+    f = lambda a, b, c: flash_attention_oracle(a, b, c, causal)  # noqa: E731
+    _, vjp = jax.vjp(f, q.astype(jnp.float32), gk.astype(jnp.float32),
+                     gv.astype(jnp.float32))
+    return vjp(do.astype(jnp.float32))
+
+
+def psg_attention_bwd_ref(q, gk, gv, do, cfg: PSGConfig,
+                          causal: bool = True):
+    """Element-level PSG attention backward — the reference-backend path.
+
+    dq is the exact fp32 cotangent (no PSG there, matching the kernel
+    path).  dk/dv apply Eq. (2) at element level on the materialized
+    probability/dS tensors: quantize each operand onto the same grids the
+    kernel uses (``flash_attn.attention_psg_scales``), form the MSB and
+    full code products per *query* head, sum each GQA group, then the
+    shared select picks predictor values where confident.  Returns
+    ``(dq, dk, dv, fallback_ratio)``.
+    """
+    import math
+
+    from repro.kernels import flash_attn as fa
+    B, S, nh, hd = q.shape
+    T, nkv = gk.shape[1], gk.shape[2]
+    g = nh // nkv
+    scale = 1.0 / math.sqrt(hd)
+    dq, _, _ = flash_attention_vjp_oracle(q, gk, gv, do, causal)
+
+    s = _attn_scores_ref(q, gk, causal)
+    p = jax.nn.softmax(s, axis=-1)                 # (B, nkv, S, g, T)
+    do_r = do.reshape(B, S, nkv, g, hd).astype(jnp.float32)
+    dp = jnp.einsum("bsngh,btnh->bnsgt", do_r, gv.astype(jnp.float32))
+    o = jnp.einsum("bnsgt,btnh->bsngh", p, gv.astype(jnp.float32))
+    delta = jnp.sum(do_r * o, axis=-1)             # (B, S, nkv, g)
+    ds = p * (dp - jnp.moveaxis(delta, 1, 2)[..., None]) * scale
+
+    dlt_rows = jnp.moveaxis(delta.reshape(B, S, nh), 1, 2)  # (B, nh, S)
+    scales = fa.attention_psg_scales(
+        q, gv, do, dlt_rows, bits_x=cfg.bits_x, bits_x_msb=cfg.bits_x_msb,
+        bits_g=cfg.bits_g, bits_g_msb=cfg.bits_g_msb)
+    s_q, s_qm, s_do, s_dom, s_ds, s_dsm = scales
+    lim_x, lim_xm = fa.qlim(cfg.bits_x), fa.qlim(cfg.bits_x_msb)
+    lim_g, lim_gm = fa.qlim(cfg.bits_g), fa.qlim(cfg.bits_g_msb)
+    q_r = q.reshape(B, S, nkv, g, hd).astype(jnp.float32)
+
+    # code products summed over (s, group) jointly == group-summed
+    # per-query-head products; the select then operates on kv-head tensors
+    dv_m = jnp.einsum("bnsgt,bsngd->btnd",
+                      fa.codes_tile(p, 1.0 / lim_xm, lim_xm),
+                      fa.codes_tile(do_r, s_dom, lim_gm))
+    dv_f = jnp.einsum("bnsgt,bsngd->btnd",
+                      fa.codes_tile(p, 1.0 / lim_x, lim_x),
+                      fa.codes_tile(do_r, s_do, lim_g))
+    dk_m = jnp.einsum("bnsgt,bsngd->btnd",
+                      fa.codes_tile(ds, s_dsm, lim_gm),
+                      fa.codes_tile(q_r, s_qm, lim_xm))
+    dk_f = jnp.einsum("bnsgt,bsngd->btnd",
+                      fa.codes_tile(ds, s_ds, lim_g),
+                      fa.codes_tile(q_r, s_q, lim_x))
+    dv, r_dv = fa.psg_attention_select(dv_m, dv_f, (1.0 / lim_xm) * s_dom,
+                                       (1.0 / lim_x) * s_do, cfg.beta)
+    dk, r_dk = fa.psg_attention_select(dk_m, dk_f, s_dsm * s_qm,
+                                       s_ds * s_q, cfg.beta)
+    return dq, dk, dv, 0.5 * (r_dv + r_dk)
+
+
+def attention_dkv_products_oracle(q, gk, gv, do, lse, delta, scales, *,
+                                  lims, causal: bool = True,
+                                  bq: int | None = None,
+                                  bk: int | None = None):
+    """Tile-replay oracle of ``flash_bwd_dkv_pallas``'s code products.
+
+    Recomputes the four per-query-head code-product accumulators with a
+    plain Python loop over the SAME tile schedule — identical block
+    shapes, identical ``lax.dot_general`` calls (the shared tile helpers
+    in flash_attn.py), identical accumulation order — so the fp32 results
+    are bit-identical to the kernel's, which is what pins the dv/dk sign
+    agreement.  Returns ``(dv_msb, dv_full, dk_msb, dk_full)``, each
+    (B, T, nh, hd) fp32 in code units.
+    """
+    import math
+
+    from repro.kernels import flash_attn as fa
+    B, S, nh, hd = q.shape
+    T, nkv = gk.shape[1], gk.shape[2]
+    g = nh // nkv
+    scale = 1.0 / math.sqrt(hd)
+    bq_ = min(fa.DEFAULT_BQ if bq is None else bq, S)
+    bk_ = min(fa.DEFAULT_BK if bk is None else bk, T)
+    pq, pk = (-S) % bq_, (-T) % bk_
+    qh = fa._heads_major(fa._pad_seq(q, pq))
+    doh = fa._heads_major(fa._pad_seq(do, pq))
+    kh = fa._heads_major(fa._pad_seq(gk, pk))
+    vh = fa._heads_major(fa._pad_seq(gv, pk))
+    Sp, Tp = S + pq, T + pk
+    rows = jnp.pad(jnp.stack([lse, delta]), ((0, 0),) * 3 + ((0, pq),)) \
+        if pq else jnp.stack([lse, delta])
+    lseh = rows[0].reshape(B * nh, Sp).astype(jnp.float32)
+    dlth = rows[1].reshape(B * nh, Sp).astype(jnp.float32)
+    s_q, s_qm, s_do, s_dom, s_ds, s_dsm = scales.astype(jnp.float32)
+    lim_x, lim_xm, lim_g, lim_gm = lims
+    n_q, n_kv = Sp // bq_, Tp // bk_
+
+    outs = [jnp.zeros((B * nh, Tp, hd), jnp.float32) for _ in range(4)]
+    for bh in range(B * nh):
+        for ikv in range(n_kv):
+            accs = [jnp.zeros((bk_, hd), jnp.float32) for _ in range(4)]
+            kt = kh[bh // g, ikv * bk_:(ikv + 1) * bk_].astype(jnp.float32)
+            vt = vh[bh // g, ikv * bk_:(ikv + 1) * bk_].astype(jnp.float32)
+            for iq in range(n_q):
+                if causal and not (iq * bq_ + bq_ - 1 >= ikv * bk_):
+                    continue
+                qt = qh[bh, iq * bq_:(iq + 1) * bq_].astype(jnp.float32)
+                dot = doh[bh, iq * bq_:(iq + 1) * bq_].astype(jnp.float32)
+                lse_t = lseh[bh, iq * bq_:(iq + 1) * bq_][:, None]
+                dlt_t = dlth[bh, iq * bq_:(iq + 1) * bq_][:, None]
+                qi = iq * bq_ + jax.lax.broadcasted_iota(
+                    jnp.int32, (bq_, bk_), 0)
+                kj = ikv * bk_ + jax.lax.broadcasted_iota(
+                    jnp.int32, (bq_, bk_), 1)
+                valid = jnp.logical_and(kj < T, qi < S)
+                if causal:
+                    valid = jnp.logical_and(valid, kj <= qi)
+                p = fa.p_tile(qt, kt, lse_t, valid, scale)
+                ds = fa.ds_tile(p, fa._dot_nt(dot, vt), dlt_t, scale)
+                accs[0] += fa._dot_tn(fa.codes_tile(p, 1.0 / lim_xm, lim_xm),
+                                      fa.codes_tile(dot, s_dom, lim_gm))
+                accs[1] += fa._dot_tn(fa.codes_tile(p, 1.0 / lim_x, lim_x),
+                                      fa.codes_tile(dot, s_do, lim_g))
+                accs[2] += fa._dot_tn(fa.codes_tile(ds, s_dsm, lim_gm),
+                                      fa.codes_tile(qt, s_qm, lim_xm))
+                accs[3] += fa._dot_tn(fa.codes_tile(ds, s_ds, lim_g),
+                                      fa.codes_tile(qt, s_q, lim_x))
+            for i in range(4):
+                outs[i] = outs[i].at[bh, ikv * bk_:(ikv + 1) * bk_].set(
+                    accs[i])
+    return tuple(jnp.moveaxis(o.reshape(B, nh, Tp, hd)[:, :, :T], 1, 2)
+                 for o in outs)

@@ -218,7 +218,16 @@ def attention_fwd(p: Params, x: jnp.ndarray, cfg: ModelConfig,
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     chunk = S > ATTN_CHUNK_THRESHOLD or (prefer_chunked and S >= 2 * ATTN_Q_CHUNK)
-    if causal and chunk:
+    if causal and cfg.sliding_window == 0 and \
+            psg.fused_attention_active(psg.active_config()):
+        # flash Pallas kernels with the PSG dk/dv backward: no (S, T)
+        # probability tensor in HBM in either direction, fallback stats on
+        # the shared probe (core/psg.attention).  Sliding-window masks and
+        # the decode ring buffer (attention_decode's wrap-aware masks need
+        # a per-batch dynamic key length the kernel's static-length guard
+        # does not express) stay on the materialized/chunked paths.
+        out = psg.attention(q, k, v, causal=True)
+    elif causal and chunk:
         out = _sdpa_qchunked(q, k, v, cfg)
     else:
         mask = causal_mask(S, S, 0, cfg.sliding_window)[None, None] if causal else None

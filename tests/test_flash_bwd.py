@@ -1,0 +1,270 @@
+"""Flash-attention backward: recomputed-tile dq vs the fp32 vjp oracle,
+BIT-IDENTICAL PSG dk/dv code products vs the tile-replay oracle, the
+attention_fwd path-parity matrix (chunked scan vs flash kernel vs fp32
+oracle), and the probe -> psg_fallback_ratio -> energy_report() channel
+from a transformer train step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import psg
+from repro.core.config import (E2TrainConfig, Experiment, ModelConfig,
+                               PSGConfig, TrainConfig)
+from repro.kernels import dispatch, ops, ref
+from repro.kernels import flash_attn as fa
+
+
+def _rand(B, S, nh, nkv, hd, seed, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (B, S, nh, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, nkv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, nkv, hd)).astype(dtype)
+    do = (jax.random.normal(ks[3], (B, S, nh, hd)) * 0.1).astype(dtype)
+    return q, k, v, do
+
+
+# shipped LM geometries (hd=128 GQA like llama3-class configs) plus the
+# awkward cases: S not a multiple of the 128 query block, tiny heads,
+# non-causal
+BWD_SHAPES = [(1, 256, 4, 2, 128, True),     # LM geometry, 2x2 blocks
+              (1, 192, 4, 2, 128, True),     # S % 128 != 0 (padded rows)
+              (2, 300, 8, 8, 32, True),      # MHA, double padding
+              (1, 128, 4, 4, 64, False)]     # non-causal
+
+
+@pytest.mark.parametrize("B,S,nh,nkv,hd,causal", BWD_SHAPES)
+def test_forward_lse_matches_oracle(B, S, nh, nkv, hd, causal):
+    q, k, v, _ = _rand(B, S, nh, nkv, hd, seed=S + nh)
+    o, lse = fa.flash_attention(q, k, v, causal=causal, interpret=True,
+                                return_lse=True)
+    o_plain = fa.flash_attention(q, k, v, causal=causal, interpret=True)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(o_plain))
+    np.testing.assert_allclose(np.asarray(lse),
+                               np.asarray(ref.attention_lse_ref(q, k, causal)),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,nh,nkv,hd,causal", BWD_SHAPES)
+def test_bwd_dq_matches_vjp_oracle(B, S, nh, nkv, hd, causal):
+    q, k, v, do = _rand(B, S, nh, nkv, hd, seed=2 * S + hd)
+    o, lse = fa.flash_attention(q, k, v, causal=causal, interpret=True,
+                                return_lse=True)
+    delta = jnp.einsum("bsnh,bsnh->bns", do, o.astype(jnp.float32))
+    dq = fa.flash_bwd_dq_pallas(q, k, v, do, lse, delta, causal=causal,
+                                interpret=True)
+    dq_o, _, _ = ref.flash_attention_vjp_oracle(q, k, v, do, causal)
+    scale = float(jnp.max(jnp.abs(dq_o))) + 1e-12
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(dq_o),
+                               atol=1e-5 * max(scale, 1.0))
+
+
+@pytest.mark.parametrize("B,S,nh,nkv,hd,causal", BWD_SHAPES)
+def test_bwd_dkv_code_products_bit_identical(B, S, nh, nkv, hd, causal):
+    """The acceptance pin: the kernel's four code-product accumulators are
+    bit-for-bit the tile-replay oracle's — same tile schedule, same dot
+    shapes, same accumulation order — so the Eq. (2) select (a shared,
+    deterministic function of these products) yields identical dk/dv signs
+    by construction."""
+    cfg = PSGConfig(enabled=True)
+    q, k, v, do = _rand(B, S, nh, nkv, hd, seed=3 * S + nh)
+    o, lse = fa.flash_attention(q, k, v, causal=causal, interpret=True,
+                                return_lse=True)
+    delta = jnp.einsum("bsnh,bsnh->bns", do, o.astype(jnp.float32))
+    scales = fa.attention_psg_scales(
+        q, v, do, delta, bits_x=cfg.bits_x, bits_x_msb=cfg.bits_x_msb,
+        bits_g=cfg.bits_g, bits_g_msb=cfg.bits_g_msb)
+    lims = (fa.qlim(cfg.bits_x), fa.qlim(cfg.bits_x_msb),
+            fa.qlim(cfg.bits_g), fa.qlim(cfg.bits_g_msb))
+    got = fa.flash_bwd_dkv_pallas(q, k, v, do, lse, delta, scales,
+                                  lims=lims, causal=causal, interpret=True)
+    want = ref.attention_dkv_products_oracle(q, k, v, do, lse, delta,
+                                             scales, lims=lims,
+                                             causal=causal)
+    for g, w, name in zip(got, want, ("dv_msb", "dv_full", "dk_msb",
+                                      "dk_full")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+
+def test_full_bwd_signs_bit_identical_to_element_oracle():
+    """End-to-end on the shipped LM geometry: ops.flash_attention_bwd's
+    dk/dv are exactly the select applied to the (group-summed) oracle
+    products — signs included, bit for bit."""
+    cfg = PSGConfig(enabled=True)
+    B, S, nh, nkv, hd = 1, 256, 4, 2, 128
+    q, k, v, do = _rand(B, S, nh, nkv, hd, seed=11)
+    o, lse = fa.flash_attention(q, k, v, causal=True, interpret=True,
+                                return_lse=True)
+    dq, dk, dv, fb = ops.flash_attention_bwd(q, k, v, o, lse, do, cfg,
+                                             causal=True, interpret=True)
+    delta = jnp.einsum("bsnh,bsnh->bns", do, o.astype(jnp.float32))
+    scales = fa.attention_psg_scales(
+        q, v, do, delta, bits_x=cfg.bits_x, bits_x_msb=cfg.bits_x_msb,
+        bits_g=cfg.bits_g, bits_g_msb=cfg.bits_g_msb)
+    lims = (fa.qlim(cfg.bits_x), fa.qlim(cfg.bits_x_msb),
+            fa.qlim(cfg.bits_g), fa.qlim(cfg.bits_g_msb))
+    parts = ref.attention_dkv_products_oracle(q, k, v, do, lse, delta,
+                                              scales, lims=lims, causal=True)
+    g = nh // nkv
+    dv_m, dv_f, dk_m, dk_f = (
+        p.reshape(B, S, nkv, g, hd).sum(axis=3) for p in parts)
+    s_q, s_qm, s_do, s_dom, s_ds, s_dsm = scales
+    dv_o, r_dv = fa.psg_attention_select(dv_m, dv_f,
+                                         (1.0 / lims[1]) * s_dom,
+                                         (1.0 / lims[0]) * s_do, cfg.beta)
+    dk_o, r_dk = fa.psg_attention_select(dk_m, dk_f, s_dsm * s_qm,
+                                         s_ds * s_q, cfg.beta)
+    # signs: BIT-IDENTICAL (the select picks a code product — exact by the
+    # products test above — and dequantization scales are positive, so no
+    # rounding can flip a sign).  Values: identical up to 1-ulp in the
+    # dequantization multiply (jit may fuse codes*s1*s2 in either order).
+    np.testing.assert_array_equal(np.sign(np.asarray(dv)),
+                                  np.sign(np.asarray(dv_o)))
+    np.testing.assert_array_equal(np.sign(np.asarray(dk)),
+                                  np.sign(np.asarray(dk_o)))
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(dv_o),
+                               rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dk_o),
+                               rtol=1e-6, atol=1e-8)
+    assert 0.0 <= float(fb) <= 1.0
+    assert abs(float(fb) - 0.5 * (float(r_dv) + float(r_dk))) < 1e-6
+
+
+def test_bwd_bf16_operands_fp32_outputs():
+    """bf16 activations (the model's real dtype): kernels accept narrow
+    operands, gradients come back finite in fp32 accumulators."""
+    cfg = PSGConfig(enabled=True)
+    q, k, v, do = _rand(1, 192, 4, 2, 64, seed=5, dtype=jnp.bfloat16)
+    o, lse = fa.flash_attention(q, k, v, causal=True, interpret=True,
+                                return_lse=True)
+    assert lse.dtype == jnp.float32
+    dq, dk, dv, fb = ops.flash_attention_bwd(q, k, v, o, lse, do, cfg,
+                                             causal=True, interpret=True)
+    for t in (dq, dk, dv):
+        assert t.dtype == jnp.float32
+        assert bool(jnp.all(jnp.isfinite(t)))
+    assert 0.0 <= float(fb) <= 1.0
+
+
+def test_reference_backend_bwd_contract():
+    """The reference backend's element-level path honors the same contract:
+    fp32 dq close to autodiff, dk/dv shaped to kv heads, ratio in [0,1]."""
+    cfg = PSGConfig(enabled=True, backend="reference")
+    q, k, v, do = _rand(1, 64, 4, 2, 32, seed=13)
+    o, lse = dispatch.attention_fwd(q, k, v, cfg, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(ref.flash_attention_oracle(q, k, v, True)),
+        atol=1e-6)
+    dq, dk, dv, fb = dispatch.attention_bwd(q, k, v, o, lse, do, cfg,
+                                            causal=True)
+    dq_o, dk_o, dv_o = ref.flash_attention_vjp_oracle(q, k, v, do, True)
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(dq_o), atol=1e-5)
+    assert dk.shape == k.shape and dv.shape == v.shape
+    assert 0.0 <= float(fb) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# attention_fwd parity matrix: chunked scan vs flash kernel vs fp32 oracle
+# ---------------------------------------------------------------------------
+
+
+PARITY_SHAPES = [(2, 192, 4, 2, 16),    # GQA, S not a multiple of 128
+                 (1, 256, 4, 4, 16)]    # MHA, block-aligned
+
+
+@pytest.mark.parametrize("B,S,nh,nkv,hd", PARITY_SHAPES)
+@pytest.mark.parametrize("return_kv", [False, True])
+def test_attention_fwd_path_parity(B, S, nh, nkv, hd, return_kv,
+                                   monkeypatch):
+    """All three causal paths — fused flash kernel, query-chunked scan,
+    materialized softmax — agree on the same PSG-quantized QKV, and the
+    fused path tracks the fp32 oracle of its own (quantized) inputs."""
+    from repro.models import layers
+    monkeypatch.setattr(layers, "ATTN_Q_CHUNK", 64)  # chunk at small S
+    d = nh * hd
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=d,
+                      num_heads=nh, num_kv_heads=nkv, d_ff=2 * d,
+                      vocab_size=64)
+    key = jax.random.PRNGKey(S + nh)
+    p = layers.init_attention(key, cfg)
+    x = jax.random.normal(key, (B, S, d), jnp.float32)
+
+    def run(pcfg, prefer_chunked):
+        with psg.enable(pcfg, psg.zero_probe()):
+            return layers.attention_fwd(p, x, cfg,
+                                        prefer_chunked=prefer_chunked,
+                                        return_kv=return_kv)
+
+    fused = run(PSGConfig(enabled=True, fused_attention=True), False)
+    chunked = run(PSGConfig(enabled=True, fused_attention=False), True)
+    mat = run(PSGConfig(enabled=True, fused_attention=False), False)
+    if return_kv:
+        (fused, (fk, fv)), (chunked, (ck, _)), (mat, _) = fused, chunked, mat
+        np.testing.assert_array_equal(np.asarray(fk), np.asarray(ck))
+        assert fk.shape == (B, S, nkv, hd) and fv.shape == (B, S, nkv, hd)
+    # the unfused paths round the probability tensor to bf16
+    # (_softmax_lowp's residual trick); the flash kernel keeps probability
+    # tiles in fp32 VMEM — so parity holds at bf16-probability resolution,
+    # not fp32
+    tol = 2e-2 * float(jnp.max(jnp.abs(fused))) + 1e-6
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(chunked),
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(mat),
+                               atol=tol)
+
+
+def test_fused_attention_auto_resolution():
+    """fused_attention=None mirrors fused_conv: on for reference/interpret,
+    off for Mosaic; explicit pin always wins; disabled PSG -> inactive."""
+    assert psg.fused_attention_active(None) is False
+    auto = PSGConfig(enabled=True)
+    with dispatch.override_backend(dispatch.BACKEND_INTERPRET):
+        assert psg.fused_attention_active(auto) is True
+    with dispatch.override_backend(dispatch.BACKEND_REFERENCE):
+        assert psg.fused_attention_active(auto) is True
+    with dispatch.override_backend(dispatch.BACKEND_MOSAIC):
+        assert psg.fused_attention_active(auto) is False
+        assert psg.fused_attention_active(
+            PSGConfig(enabled=True, fused_attention=True)) is True
+    assert psg.fused_attention_active(
+        PSGConfig(enabled=True, fused_attention=False)) is False
+
+
+# ---------------------------------------------------------------------------
+# probe -> psg_fallback_ratio -> energy_report() from a transformer step
+# ---------------------------------------------------------------------------
+
+
+def test_lm_train_step_emits_attention_fallback_into_energy_report():
+    """A PSG-enabled transformer train step routes attention through the
+    fused kernels (auto default under the interpret backend), the probe's
+    MAC-weighted fallback ratio lands in the step metrics, and
+    Trainer.energy_report() consumes it as the measured PSG column."""
+    from repro.data.synthetic import MarkovLMTask, make_lm_batch
+    from repro.training.train_step import init_train_state
+    from repro.training.trainer import Trainer
+
+    model = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                        num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=32,
+                        dtype="float32")
+    e2 = E2TrainConfig(psg=PSGConfig(enabled=True, swa=False))
+    exp = Experiment(model=model, e2=e2,
+                     train=TrainConfig(global_batch=4, seq_len=16, lr=0.05,
+                                       optimizer="psg", total_steps=3,
+                                       schedule="constant"),
+                     task="lm")
+    task = MarkovLMTask(vocab=model.vocab_size)
+    mk = lambda s, sh: make_lm_batch(task, 0, s, sh,              # noqa: E731
+                                     exp.train.global_batch,
+                                     exp.train.seq_len)
+    tr = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk)
+    hist = tr.run(3)
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    ratios = [h["psg_fallback_ratio"] for h in hist]
+    assert all(0.0 <= r <= 1.0 for r in ratios)
+    fb = tr.measured_psg_fallback()
+    assert fb is not None and 0.0 <= fb <= 1.0
+    rep = tr.energy_report()
+    assert rep.psg.measured is not None
+    assert abs(rep.psg.measured - fb) < 1e-6

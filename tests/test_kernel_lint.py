@@ -51,7 +51,8 @@ def test_registry_enumerates_every_shipped_kernel():
     assert base == {
         "psg_grad_w_pallas", "predictor_matmul_pallas", "conv_fwd_pallas",
         "conv_grad_w_predictor_pallas", "conv_grad_w_pallas",
-        "conv_grad_x_pallas", "quantize_pallas", "flash_attention"}
+        "conv_grad_x_pallas", "quantize_pallas", "flash_attention",
+        "flash_bwd_dq_pallas", "flash_bwd_dkv_pallas"}
 
 
 def test_conv_registry_covers_every_shipped_geometry_kind():
