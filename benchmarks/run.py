@@ -34,8 +34,14 @@ for the paper backbones and the smoke LM, plus the full lint battery —
 Pallas kernel linter, repo convention linter, precision-flow lint and
 hot-loop lint (benchmarks/bench_audit.py).  Exits 1 when the audit or a
 linter *fails*, 2 when a lint pass *errors* (a crashing linter must not
-pass CI silently) — this is the CI gate.  CI uploads all four BENCH
-JSONs.
+pass CI silently) — this is the CI gate.
+
+``--json-ft [PATH]`` (default ``BENCH_ft.json``) records the
+fault-injection recovery battery (benchmarks/bench_ft.py): corruption
+detection + fallback per injected mode, producer-raise propagation,
+write-failure retry/surfacing, and the supervised kill-and-restart smoke
+with its bitwise-vs-uninterrupted verdict.  Exits 1 when any recovery
+failed — the fault-injection CI gate.  CI uploads all BENCH JSONs.
 """
 from __future__ import annotations
 
@@ -98,7 +104,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (smd,slu,psg,e2train,"
                          "cnn,convergence,kernels,conv,attn,throughput,"
-                         "roofline,audit)")
+                         "roofline,audit,ft)")
     ap.add_argument("--json", nargs="?", const="BENCH_energy.json",
                     default=None, metavar="PATH",
                     help="write the EnergyReport trajectory record to PATH "
@@ -125,11 +131,18 @@ def main(argv=None) -> None:
                     help="write the static cost-audit record (CostModel vs "
                          "jaxpr vs HLO + kernel/repo lint) to PATH and exit "
                          "nonzero on divergence or lint findings")
+    ap.add_argument("--json-ft", nargs="?", const="BENCH_ft.json",
+                    default=None, metavar="PATH",
+                    help="write the fault-injection recovery record "
+                         "(corruption fallback, producer-raise, write "
+                         "retry/surfacing, kill-and-restart) to PATH and "
+                         "exit nonzero if any recovery failed")
     args = ap.parse_args(argv)
     fast = not args.full
 
     if args.json or args.json_throughput or args.json_conv \
-            or args.json_attn or args.json_audit:            # write all given
+            or args.json_attn or args.json_audit \
+            or args.json_ft:                                 # write all given
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(energy_json(fast=fast), f, indent=2)
@@ -178,11 +191,23 @@ def main(argv=None) -> None:
                 sys.exit(2)
             if not record["all_passed"]:
                 sys.exit(1)
+        if args.json_ft:
+            from benchmarks.bench_ft import ft_json
+            record = ft_json(fast=fast)
+            with open(args.json_ft, "w") as f:
+                json.dump(record, f, indent=2)
+            print(f"wrote {args.json_ft}", file=sys.stderr)
+            if not record["all_recovered"]:
+                failed = [s["scenario"] for s in record["scenarios"]
+                          if not s["recovered"]]
+                print(f"recovery failed: {', '.join(failed)}",
+                      file=sys.stderr)
+                sys.exit(1)
         return
 
     from benchmarks import (bench_attn, bench_audit, bench_cnn, bench_conv,
-                            bench_convergence, bench_e2train, bench_kernels,
-                            bench_psg, bench_slu, bench_smd,
+                            bench_convergence, bench_e2train, bench_ft,
+                            bench_kernels, bench_psg, bench_slu, bench_smd,
                             bench_throughput, roofline)
 
     benches = {
@@ -198,6 +223,7 @@ def main(argv=None) -> None:
         "throughput": bench_throughput.run,  # §Loop (chunked vs per-step)
         "roofline": roofline.run,       # §Roofline (from dry-run artifact)
         "audit": bench_audit.run,       # §Analysis (static cost audit)
+        "ft": bench_ft.run,             # §Fault-tolerance (injected faults)
     }
     only = set(args.only.split(",")) if args.only else set(benches)
 

@@ -24,6 +24,15 @@ Three conventions this repo's architecture depends on (DESIGN.md
   host-side *by design* are allowlisted with a justification string
   (same convention as ``analysis/precision_lint.ALLOWLIST``).
 
+* ``swallowed-exception`` — bare ``except:`` and
+  ``except Exception/BaseException`` with a pass-only body are forbidden.
+  The fault-tolerance layer's correctness rests on errors *surfacing*: a
+  checkpoint write that fails silently resumes from a stale step, a data
+  producer that dies silently hangs the loop (both were live bugs before
+  the FT PR — DESIGN.md §Fault-tolerance).  A module that must swallow
+  broadly is allowlisted with a justification, same convention as
+  ``host-sync``.
+
 Run as a module (``python -m repro.analysis.repo_lint``) it exits nonzero
 on any finding — that is the CI hook.
 """
@@ -58,7 +67,17 @@ _HOST_SYNC_ALLOWED: Dict[str, str] = {
     "repro/serving/engine.py":
         "single-host wave-batching demo decodes on the host; the ROADMAP "
         "open item rebuilds it on the chunk compiler",
+    "repro/ft/faults.py":
+        "fault injection rewrites on-disk checkpoints with host numpy by "
+        "design — it never touches device values in the hot loop",
 }
+
+# file -> justification: modules allowed to swallow exceptions broadly.
+# Same contract as _HOST_SYNC_ALLOWED: an entry REQUIRES a justification
+# string — silent error-eating without a recorded why is exactly the bug
+# class the rule exists to kill (the async checkpoint writer and the data
+# producer thread both shipped with it).
+_SWALLOW_ALLOWED: Dict[str, str] = {}
 
 
 @dataclass(frozen=True)
@@ -66,6 +85,7 @@ class RepoFinding:
     path: str          # src-root-relative, posix
     line: int
     rule: str          # "pallas-outside-kernels" | "env-read" | "host-sync"
+                       # | "swallowed-exception"
     message: str
 
     def __str__(self) -> str:
@@ -137,14 +157,60 @@ def check_host_sync_allowlist(
                 "— record why this module is host-side by design")
 
 
+def check_swallow_allowlist(
+        allowed: Optional[Dict[str, str]] = None) -> None:
+    """Every swallowed-exception allowlist entry must carry a justification."""
+    entries = _SWALLOW_ALLOWED if allowed is None else allowed
+    for path, why in entries.items():
+        if not (isinstance(why, str) and why.strip()):
+            raise ValueError(
+                f"swallowed-exception allowlist entry {path!r} has no "
+                "justification — record why this module must swallow "
+                "exceptions broadly")
+
+
+_BROAD_EXC = ("Exception", "BaseException")
+
+
+def _swallow_of(node: ast.AST) -> Optional[Tuple[str, int]]:
+    """(description, lineno) if this except handler swallows broadly.
+
+    Flags bare ``except:`` always, and ``except Exception/BaseException``
+    (bound or not, alone or in a tuple) whose body does nothing but
+    ``pass``/``...`` — the handler shapes under which the async-writer and
+    producer-thread bugs hid.
+    """
+    if not isinstance(node, ast.ExceptHandler):
+        return None
+    if node.type is None:
+        return "bare except:", node.lineno
+    types = node.type.elts if isinstance(node.type, ast.Tuple) \
+        else [node.type]
+    names = [t.id if isinstance(t, ast.Name) else
+             (t.attr if isinstance(t, ast.Attribute) else "")
+             for t in types]
+    broad = next((n for n in names if n in _BROAD_EXC), None)
+    if broad is None:
+        return None
+    body_is_noop = all(
+        isinstance(st, ast.Pass)
+        or (isinstance(st, ast.Expr) and isinstance(st.value, ast.Constant))
+        for st in node.body)
+    if body_is_noop:
+        return f"except {broad}: pass", node.lineno
+    return None
+
+
 def lint_source(src: str, relpath: str) -> List[RepoFinding]:
     """Lint one module's source text (``relpath`` is src-root-relative)."""
     check_host_sync_allowlist()
+    check_swallow_allowlist()
     findings: List[RepoFinding] = []
     tree = ast.parse(src, filename=relpath)
     in_kernels = relpath.startswith(_PALLAS_ALLOWED_PREFIX)
     host_ok = (relpath.startswith(_HOST_SYNC_ALLOWED_PREFIXES)
                or relpath in _HOST_SYNC_ALLOWED)
+    swallow_ok = relpath in _SWALLOW_ALLOWED
     for node in ast.walk(tree):
         if isinstance(node, ast.Attribute) and node.attr == "pallas_call" \
                 and not in_kernels:
@@ -160,6 +226,15 @@ def lint_source(src: str, relpath: str) -> List[RepoFinding]:
                 f"{what} outside training/ — device->host syncs belong to "
                 "the loop boundary (one per chunk); host-side-by-design "
                 "modules need a justified _HOST_SYNC_ALLOWED entry"))
+        swallow = _swallow_of(node)
+        if swallow is not None and not swallow_ok:
+            what, line = swallow
+            findings.append(RepoFinding(
+                relpath, line, "swallowed-exception",
+                f"{what} — errors must surface (a silent failure here is "
+                "the async-writer/producer-thread bug class); catch the "
+                "specific exception or add a justified _SWALLOW_ALLOWED "
+                "entry"))
         env = _env_var_of(node)
         if env is not None:
             name, line = env

@@ -93,6 +93,12 @@ class EnergyReport:
     # traced-jaxpr and compiled-HLO counts, False when the audit ran and
     # diverged, None when no audit was requested — None ≠ False.
     validated_against_hlo: Optional[bool] = None
+    # straggler telemetry (DESIGN.md §Fault-tolerance): steps force-dropped
+    # because they exceeded the per-step deadline.  A subset of the SMD
+    # dropped count (the measured smd ratio already reflects them); carried
+    # separately so a report distinguishes "dropped by schedule" from
+    # "dropped because the hardware straggled".
+    straggler_dropped: int = 0
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -147,6 +153,7 @@ class EnergyLedger:
         self.cost = cost
         self.executed_steps = 0
         self.dropped_steps = 0
+        self.straggler_dropped = 0
         self._slu_exec: List[float] = []
         self._psg_fallback: List[float] = []
 
@@ -170,6 +177,7 @@ class EnergyLedger:
         # the trainer's counters are authoritative (drops leave no metrics)
         led.executed_steps = trainer.executed_steps
         led.dropped_steps = trainer.dropped_steps
+        led.straggler_dropped = getattr(trainer, "straggler_dropped_steps", 0)
         return led
 
     # ----- measured quantities (None = not measured, never 0) -----
@@ -307,4 +315,5 @@ class EnergyLedger:
             energy_savings_assumed=1.0 - e_assumed / baseline,
             energy_savings_measured=(
                 None if e_measured is None else 1.0 - e_measured / baseline),
-            validated_against_hlo=verdict)
+            validated_against_hlo=verdict,
+            straggler_dropped=int(self.straggler_dropped))

@@ -33,17 +33,26 @@ class DataPipeline:
         self._step = start_step
         self._q: "queue.Queue" = queue.Queue(maxsize=max(prefetch, 1))
         self._stop = threading.Event()
+        # a make_batch exception must not die with the producer thread: it
+        # is captured here and re-raised in the CONSUMER (__next__), so the
+        # trainer sees it within one get-timeout instead of spinning on an
+        # empty queue forever (the pre-PR 10 hang)
+        self._error: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._producer, daemon=True)
         self._thread.start()
 
     def _producer(self):
         step = self._step
         while not self._stop.is_set():
-            if self._smd.enabled and not smd_keep_host(
-                    self._seed, step, self._smd.drop_prob):
-                item = (step, None)                 # SMD drop: no generation
-            else:
-                item = (step, self._make(step, self._shard))
+            try:
+                if self._smd.enabled and not smd_keep_host(
+                        self._seed, step, self._smd.drop_prob):
+                    item = (step, None)             # SMD drop: no generation
+                else:
+                    item = (step, self._make(step, self._shard))
+            except BaseException as e:              # surfaced, never swallowed
+                self._error = e
+                return
             while not self._stop.is_set():
                 try:
                     self._q.put(item, timeout=0.1)
@@ -62,6 +71,12 @@ class DataPipeline:
             try:
                 return self._q.get(timeout=0.1)     # (step, batch | None)
             except queue.Empty:
+                if self._error is not None:
+                    # producer died on this exception; queue is drained by
+                    # now, so every already-generated batch was consumed —
+                    # re-raise the ORIGINAL exception at the call site
+                    self._stop.set()
+                    raise self._error
                 continue
 
     def close(self, timeout: float = 5.0) -> bool:

@@ -1,2 +1,18 @@
 from repro.distributed.sharding import (param_shardings, batch_sharding,
                                         state_shardings, logical_rules)
+
+
+def process_shard():
+    """``(shard, num_shards)`` for the counter-based data path.
+
+    The canonical way a launcher picks its data shard: under
+    ``jax.distributed`` each process generates only its shard of the
+    global batch (``make_batch(step, shard)`` is a pure function of
+    ``(seed, step, shard)``, so shards never overlap and never require
+    host data exchange); single-process runs get ``(0, 1)``.  Elastic
+    restarts on a smaller world re-derive shard ids from the new process
+    set — the counter-based schedule makes the re-sharded stream
+    deterministic by construction (DESIGN.md §Fault-tolerance).
+    """
+    import jax
+    return jax.process_index(), jax.process_count()

@@ -1,2 +1,6 @@
-from repro.ft.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.ft.checkpoint import (CheckpointWriteError, intact_steps,
+                                 latest_intact_step, latest_step,
+                                 restore_checkpoint, save_checkpoint,
+                                 verify_checkpoint, wait_for_saves)
 from repro.ft.elastic import reshard_state
+from repro.ft.supervisor import Attempt, RestartPolicy, Supervisor

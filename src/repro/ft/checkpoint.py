@@ -1,6 +1,6 @@
 """Checkpoint save/restore — host-local npz shards + a JSON manifest.
 
-Design for 1000+ nodes (DESIGN.md §7):
+Design for 1000+ nodes (DESIGN.md §Fault-tolerance):
 
 * each host writes only the *addressable* shards of its arrays (here: the
   whole array on the single-host container; the addressing logic goes
@@ -8,9 +8,24 @@ Design for 1000+ nodes (DESIGN.md §7):
 * saves are atomic (tmp file + rename) and optionally async (a daemon
   thread snapshots to host RAM first — device-to-host copy is the only
   part on the critical path, matching async-checkpointing practice);
-* the manifest records the step, the flattened tree structure and per-leaf
-  dtypes/shapes, so restore can (a) validate, (b) feed ``elastic.py`` which
-  reshards onto a different mesh.
+* the **manifest is the commit record**: it is written atomically AFTER
+  the npz landed and carries a per-leaf CRC32 next to dtypes/shapes, so a
+  checkpoint is *intact* only when (a) the manifest exists, (b) every
+  manifest leaf is present in the npz, and (c) every checksum matches.
+  A crash between the npz rename and the manifest rename leaves a
+  detectable partial save, never a silently-loadable half-checkpoint;
+* restore verifies integrity and **falls back to the previous intact
+  step** instead of crashing on (or worse, loading) a truncated or
+  corrupted save — node loss during a save must not take out the run's
+  whole checkpoint history;
+* the async writer retries with backoff (transient NFS/object-store
+  hiccups) and surfaces terminal failures: ``wait_for_saves`` raises
+  :class:`CheckpointWriteError` instead of letting a daemon thread die
+  silently with the data.
+
+The manifest also records the flattened tree structure, so restore can
+(a) validate, (b) feed ``elastic.py`` which reshards onto a different
+mesh.
 """
 from __future__ import annotations
 
@@ -19,13 +34,38 @@ import os
 import re
 import threading
 import time
-from typing import Any, Dict, Optional, Tuple
+import zipfile
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 _SEP = "::"
 _pending: Dict[str, threading.Thread] = {}
+# path -> terminal exception of a failed (post-retry) async write.  Never
+# dropped silently: wait_for_saves() turns these into CheckpointWriteError.
+_errors: Dict[str, BaseException] = {}
+_errors_lock = threading.Lock()
+
+# indirection so ft/faults.py can deterministically inject write failures
+# (disk full, flaky storage) without monkeypatching numpy globally
+_savez = np.savez
+
+MANIFEST_SUFFIX = ".manifest.json"
+WRITE_RETRIES = 3          # attempts per save (1 + 2 retries)
+WRITE_BACKOFF_S = 0.05     # doubles per retry
+
+
+class CheckpointWriteError(RuntimeError):
+    """One or more checkpoint writes failed terminally (post-retry)."""
+
+    def __init__(self, failures: Dict[str, BaseException]):
+        self.failures = dict(failures)
+        detail = "; ".join(f"{os.path.basename(p)}: {e!r}"
+                           for p, e in sorted(self.failures.items()))
+        super().__init__(f"{len(self.failures)} checkpoint write(s) failed: "
+                         f"{detail}")
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -38,6 +78,14 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _leaf_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _ckpt_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+
+
 def save_checkpoint(ckpt_dir: str, state: Any, step: int,
                     async_save: bool = False) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
@@ -46,22 +94,43 @@ def save_checkpoint(ckpt_dir: str, state: Any, step: int,
     manifest = {
         "step": step,
         "time": time.time(),
-        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                       "crc32": _leaf_crc(v)}
                    for k, v in flat.items()},
         "treedef": str(treedef),
     }
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    path = _ckpt_path(ckpt_dir, step)
     if path in _pending:           # same step already being written
         return path
 
-    def _write():
+    def _write_once():
         tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp.npz"
-        np.savez(tmp, **flat)
-        os.replace(tmp, path)
+        try:
+            _savez(tmp, **flat)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+        # the manifest rename COMMITS the checkpoint: readers treat a
+        # manifest-less npz as an in-flight/partial save
         mtmp = path + ".manifest.tmp"
         with open(mtmp, "w") as f:
             json.dump(manifest, f)
-        os.replace(mtmp, path + ".manifest.json")
+        os.replace(mtmp, path + MANIFEST_SUFFIX)
+
+    def _write():
+        delay = WRITE_BACKOFF_S
+        for attempt in range(WRITE_RETRIES):
+            try:
+                _write_once()
+                return
+            except OSError as e:
+                if attempt == WRITE_RETRIES - 1:
+                    with _errors_lock:
+                        _errors[path] = e
+                    return
+                time.sleep(delay)
+                delay *= 2
 
     if async_save:
         th = threading.Thread(target=_write, daemon=True)
@@ -69,13 +138,36 @@ def save_checkpoint(ckpt_dir: str, state: Any, step: int,
         _pending[path] = th
     else:
         _write()
+        with _errors_lock:
+            err = _errors.pop(path, None)
+        if err is not None:
+            raise CheckpointWriteError({path: err})
     return path
 
 
-def wait_for_saves():
+def _join_pending() -> None:
     for th in list(_pending.values()):
         th.join()
     _pending.clear()
+
+
+def wait_for_saves(raise_on_error: bool = True) -> Dict[str, BaseException]:
+    """Join all in-flight async writes.
+
+    A failed write (post-retry) is a *surfaced* error, never a silently
+    dead daemon thread: by default this raises :class:`CheckpointWriteError`
+    aggregating every failure since the last call; with
+    ``raise_on_error=False`` it returns-and-consumes the failure dict
+    instead (the trainer's final-save path uses this to report rather
+    than crash).
+    """
+    _join_pending()
+    with _errors_lock:
+        failures = dict(_errors)
+        _errors.clear()
+    if failures and raise_on_error:
+        raise CheckpointWriteError(failures)
+    return failures
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
@@ -87,6 +179,66 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
              for m in [re.fullmatch(r"step_(\d+)\.npz", f)] if m]
     return max(steps) if steps else None
+
+
+# ---------------------------------------------------------------------------
+# integrity
+# ---------------------------------------------------------------------------
+
+
+def verify_checkpoint(ckpt_dir: str, step: int) -> Tuple[bool, str]:
+    """``(intact, reason)`` for one saved step.
+
+    Checks, in order: npz present, manifest present (the commit record —
+    a manifest-less npz is a partial save), npz readable (truncation shows
+    up here), every manifest leaf present with matching shape/dtype, every
+    per-leaf CRC32 matching.  ``reason`` names the first failure.
+    """
+    path = _ckpt_path(ckpt_dir, step)
+    if not os.path.exists(path):
+        return False, "missing npz"
+    mpath = path + MANIFEST_SUFFIX
+    if not os.path.exists(mpath):
+        return False, "missing manifest (uncommitted/partial save)"
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        return False, f"unreadable manifest: {e!r}"
+    leaves = manifest.get("leaves", {})
+    try:
+        with np.load(path) as data:
+            files = set(data.files)
+            missing = set(leaves) - files
+            if missing:
+                return False, f"missing leaves: {sorted(missing)[:5]}"
+            for key, meta in leaves.items():
+                arr = data[key]
+                if list(arr.shape) != list(meta["shape"]) or \
+                        str(arr.dtype) != meta["dtype"]:
+                    return False, f"leaf {key}: shape/dtype mismatch"
+                if "crc32" in meta and _leaf_crc(arr) != meta["crc32"]:
+                    return False, f"leaf {key}: checksum mismatch"
+    except (OSError, ValueError, zlib.error, zipfile.BadZipFile,
+            EOFError, KeyError) as e:
+        return False, f"unreadable npz (truncated/corrupt): {e!r}"
+    return True, "ok"
+
+
+def intact_steps(ckpt_dir: str) -> List[int]:
+    """All verified-intact steps in ``ckpt_dir``, ascending."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                   for m in [re.fullmatch(r"step_(\d+)\.npz", f)] if m)
+    return [s for s in steps if verify_checkpoint(ckpt_dir, s)[0]]
+
+
+def latest_intact_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step that passes integrity verification — the step an
+    elastic restart resumes from (``ft/supervisor.py``)."""
+    steps = intact_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def resume_chunk_start(ckpt_dir: str,
@@ -106,13 +258,36 @@ def resume_chunk_start(ckpt_dir: str,
 
 
 def restore_checkpoint(ckpt_dir: str, like: Any,
-                       step: Optional[int] = None) -> Tuple[Any, int]:
-    """Restore into the structure of ``like`` (validates shapes/dtypes)."""
-    wait_for_saves()
-    step = step if step is not None else latest_step(ckpt_dir)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+                       step: Optional[int] = None,
+                       verify: bool = True) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (validates shapes/dtypes).
+
+    With ``verify=True`` (default) a truncated/corrupt/partial save is
+    detected by the manifest checksums and restore **falls back to the
+    newest earlier intact step** rather than crashing or loading garbage;
+    ``FileNotFoundError`` is raised only when no intact checkpoint exists
+    at all.  The returned step tells the caller which save was actually
+    loaded.  ``verify=False`` restores the raw requested/latest step
+    (legacy behavior; shape validation still applies).
+    """
+    # join in-flight writes but do NOT consume failure records: a failed
+    # save simply isn't an intact candidate here, and the failure must
+    # still reach the next wait_for_saves() caller
+    _join_pending()
+    if verify:
+        candidates = intact_steps(ckpt_dir)
+        if step is not None:
+            candidates = [s for s in candidates if s <= step]
+        if not candidates:
+            raise FileNotFoundError(
+                f"no intact checkpoint in {ckpt_dir}"
+                + (f" at or before step {step}" if step is not None else ""))
+        step = candidates[-1]
+    else:
+        step = step if step is not None else latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = _ckpt_path(ckpt_dir, step)
     data = np.load(path)
     flat_like = _flatten(like)
     missing = set(flat_like) - set(data.files)

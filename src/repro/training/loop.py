@@ -54,6 +54,13 @@ from repro.training.train_step import TrainState, make_train_step
 #                             default (see the docstring below;
 #                             ``Trainer(donate_chunk_state=True)`` is the
 #                             explicit opt-in).
+#
+# The straggler-deadline instrumentation (``make_chunk_step(...,
+# step_timer=...)``) is an EXPLICIT OPT-IN that trades one ordered host
+# callback per scanned step for per-step wall-clock visibility — the same
+# opt-in convention as donation.  The default program (what the lint
+# traces) stays callback-free; ``Trainer(deadline_s=...)`` is the only
+# caller that requests the timed variant (DESIGN.md §Fault-tolerance).
 CHUNK_CONTRACT = (
     "no-host-callback",
     "static-trip-count",
@@ -63,7 +70,8 @@ CHUNK_CONTRACT = (
 )
 
 
-def make_chunk_step(exp: Experiment, K: Optional[int] = None):
+def make_chunk_step(exp: Experiment, K: Optional[int] = None,
+                    step_timer=None):
     """Build ``(state, batches, step_increment) -> (state, stacked_metrics)``.
 
     ``batches`` is the chunk's executed-step batches stacked along a new
@@ -71,6 +79,16 @@ def make_chunk_step(exp: Experiment, K: Optional[int] = None):
     doc).  ``K`` is an optional declared chunk length: when given, calls are
     validated against it (the tail chunk of a run may be shorter — jit
     retraces per shape, so pass ``K=None`` to accept any length).
+
+    ``step_timer`` opts into the straggler-deadline instrumentation: a
+    host callable ``step_timer(step)`` invoked via an ORDERED
+    ``jax.debug.callback`` at the top of every scanned step, so the host
+    observes device-side per-step boundaries (the gap between consecutive
+    callbacks is one executed step's device time).  The default
+    (``None``) program contains no callback — the ``CHUNK_CONTRACT``
+    ``no-host-callback`` rule applies to it; the timed variant is the
+    explicit opt-in ``Trainer(deadline_s=...)`` requests at per-step
+    straggler granularity (DESIGN.md §Fault-tolerance).
 
     The returned function is pure and jittable; callers jit it once and let
     shape-driven retracing handle tail chunks.  Do NOT jit it with
@@ -96,6 +114,10 @@ def make_chunk_step(exp: Experiment, K: Optional[int] = None):
             # advance over the drops *before* this executed step; train_step
             # itself adds the final +1 — net advance per scan step is `inc`
             st = st._replace(step=st.step + (inc - 1))
+            if step_timer is not None:
+                # ordered: sequenced with the scan's effects so timestamp
+                # arrival order matches device step order
+                jax.debug.callback(step_timer, st.step, ordered=True)
             return train_step(st, batch)
 
         # the named scope marks the contract-bearing scan for the static

@@ -28,15 +28,22 @@ Operational concerns of a long-running multi-pod job, in both modes:
 * periodic + final checkpoints via ``repro.ft.checkpoint`` (async save);
   in chunked mode the cadence is evaluated at chunk granularity and saves
   land on chunk boundaries (``repro.ft.checkpoint.resume_chunk_start``);
-* a straggler hook: if a step (per-step mode) or a chunk's mean executed
-  step (chunked mode) exceeds ``deadline_s`` observed on this host, the
-  next kept step is pre-declared droppable — the SMD machinery makes that
-  sound (DESIGN.md §7).  On real multi-host deployments the deadline check
+* a straggler hook at PER-STEP granularity in both modes: per-step mode
+  times each dispatch directly; chunked mode opts into the timed chunk
+  program (``make_chunk_step(step_timer=...)`` — one ordered host
+  callback per scanned step, so per-step device-side boundaries are
+  observable without breaking the chunk into per-step dispatches).  Every
+  step whose wall time exceeds ``deadline_s`` arms one forced drop; armed
+  drops are consumed by subsequent kept steps (``ChunkPlanner.drop``) and
+  counted in ``straggler_dropped_steps``, which ``energy_report()``
+  surfaces — the SMD machinery makes forced drops sound (DESIGN.md
+  §Fault-tolerance).  On real multi-host deployments the deadline check
   runs per-host against the shared counter-based SMD schedule.
 """
 from __future__ import annotations
 
 import contextlib
+import sys
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -73,11 +80,14 @@ class Trainer:
         self.prefetch = prefetch
         self.donate_chunk_state = donate_chunk_state
         self.history: List[Dict[str, float]] = []
-        self._straggler_pending = False
+        self._straggler_pending = 0     # armed forced drops (a count)
         self._last_sync_t = 0.0
         self.executed_steps = 0
         self.dropped_steps = 0
+        self.straggler_dropped_steps = 0   # subset of dropped_steps
+        self.save_errors: Dict[str, BaseException] = {}
         self._chunk_fn = None           # built lazily (chunked mode only)
+        self._step_times: Dict[int, float] = {}   # timed-chunk timestamps
         if mesh is not None:
             from repro.distributed.sharding import state_shardings
             state = jax.device_put(state, state_shardings(state, mesh))
@@ -106,12 +116,16 @@ class Trainer:
             if e2.smd.enabled and not smd_keep_host(self.exp.train.seed, step,
                                                     e2.smd.drop_prob):
                 drop = True
+            forced = False
             if self._straggler_pending:       # straggler -> SMD-style drop
-                drop = True
-                self._straggler_pending = False
+                if not drop:
+                    forced = True             # an otherwise-kept step
+                drop = True                   # (an SMD drop absorbs the arm)
+                self._straggler_pending -= 1
             if drop:
                 self.state = self.state._replace(step=self.state.step + 1)
                 self.dropped_steps += 1
+                self.straggler_dropped_steps += int(forced)
                 continue
 
             batch = self.make_batch(step, self.shard)
@@ -124,7 +138,7 @@ class Trainer:
             self.history.append(metrics)
             self.executed_steps += 1
             if self.deadline_s and dt > self.deadline_s:
-                self._straggler_pending = True
+                self._straggler_pending += 1
             if self.ckpt_dir and self.ckpt_every and \
                     (step + 1) % self.ckpt_every == 0:
                 self._save(step)
@@ -155,8 +169,18 @@ class Trainer:
             # the per-step loop to fp tolerance, not bit-for-bit
             # (tests/test_loop.py::test_donate_chunk_state_parity).
             donate = (0,) if self.donate_chunk_state else ()
-            self._chunk_fn = jax.jit(make_chunk_step(self.exp),
-                                     donate_argnums=donate)
+            # deadline_s > 0 opts into the TIMED chunk program: one ordered
+            # host callback per scanned step records device-side step
+            # boundaries, so the straggler deadline applies per step, not
+            # per chunk mean (DESIGN.md §Fault-tolerance).  The default
+            # program stays callback-free (CHUNK_CONTRACT).  Ordered
+            # effects are single-device only in XLA, so mesh runs keep
+            # the chunk-mean fallback clock.
+            timer = (self._record_step_time
+                     if self.deadline_s and self.mesh is None else None)
+            self._chunk_fn = jax.jit(
+                make_chunk_step(self.exp, step_timer=timer),
+                donate_argnums=donate)
         planner = ChunkPlanner(self.chunk_steps)
         self._last_sync_t = 0.0
         start = int(self.state.step)
@@ -173,13 +197,14 @@ class Trainer:
                 assert step == start + planner.executed + planner.dropped, \
                     "pipeline out of lockstep with the SMD schedule"
                 if self._straggler_pending:
-                    # same contract as the per-step loop: the flag is
+                    # same contract as the per-step loop: each armed drop is
                     # consumed by the NEXT step whatever it is — an SMD
                     # drop absorbs it (one drop, not two); a kept step is
                     # force-dropped (its prefetched batch is discarded)
-                    self._straggler_pending = False
+                    self._straggler_pending -= 1
                     if batch is not None:
                         planner.drop(step, batch)
+                        self.straggler_dropped_steps += 1
                         continue
                 chunk = planner.add(step, batch)
                 if chunk is not None:
@@ -263,18 +288,62 @@ class Trainer:
                 print(f"step {step}: "
                       f"loss={metrics.get('total_loss', 0):.4f} "
                       f"({per_step_s*1e3:.0f} ms)")
-        if self.deadline_s and per_step_s > self.deadline_s:
-            self._straggler_pending = True
+        if self.deadline_s and not self._arm_stragglers(steps, sync_t):
+            # no device-side timestamps arrived (callback not yet flushed or
+            # instrumentation unavailable): fall back to the pre-PR 10
+            # chunk-mean check so a straggling chunk still arms one drop
+            if per_step_s > self.deadline_s:
+                self._straggler_pending += 1
 
-    def _final_save(self):
+    def _record_step_time(self, step) -> None:
+        """Ordered-callback target: one timestamp per scanned step, keyed by
+        the nominal step counter (runs on JAX's callback thread)."""
+        self._step_times[int(step)] = time.perf_counter()
+
+    def _arm_stragglers(self, steps, end_t: float) -> bool:
+        """Per-step deadline check over one finished chunk's device-side
+        step boundaries.  The gap between consecutive step timestamps is
+        one executed step's device time; the chunk's last step is bounded
+        by the metrics-sync time (a slight over-estimate — host get
+        latency — conservative in the drop direction).  Each straggling
+        step arms ONE forced drop.  Returns whether any timestamps were
+        available for this chunk."""
+        jax.effects_barrier()          # flush this chunk's ordered callbacks
+        ts = [self._step_times.pop(s, None) for s in steps]
+        if all(t is None for t in ts):
+            return False
+        for i, t in enumerate(ts):
+            if t is None:
+                continue
+            nxt = next((u for u in ts[i + 1:] if u is not None), end_t)
+            if nxt - t > self.deadline_s:
+                self._straggler_pending += 1
+        return True
+
+    def _final_save(self) -> bool:
+        """Final checkpoint; returns whether every pending save landed.
+
+        A failed write (disk full, permission — surfaced by the async
+        writer after retries) is REPORTED, never claimed as success: the
+        failures land in ``self.save_errors`` and are printed, and the
+        caller can decide whether a run without a final checkpoint is
+        acceptable.  Training results (history/telemetry) are preserved
+        either way."""
         if not self.ckpt_dir:
-            return
+            return True
         self._save(int(self.state.step) - 1)
         # the final save must survive process exit: async writers are
         # daemon threads, and an orphaned write leaves a stale .tmp
         # (and no checkpoint) for the next --resume to trip over
         from repro.ft.checkpoint import wait_for_saves
-        wait_for_saves()
+        failures = wait_for_saves(raise_on_error=False)
+        if failures:
+            self.save_errors.update(failures)
+            for path, err in failures.items():
+                print(f"CHECKPOINT SAVE FAILED (post-retry): {path}: {err!r}",
+                      file=sys.stderr)
+            return False
+        return True
 
     # ------------------------------------------------------------------
     # reporting

@@ -91,6 +91,41 @@ def test_pipeline_close_mid_consumption():
     assert not pipe._thread.is_alive()
 
 
+def test_pipeline_producer_exception_propagates():
+    """Regression (PR 10): a make_batch exception must not die silently
+    with the producer thread.  Already-generated batches are consumed
+    first, then the ORIGINAL exception re-raises at the consumer call site
+    within one get-timeout — instead of the consumer spinning forever on
+    an empty queue."""
+    def mk(step, shard):
+        if step >= 3:
+            raise RuntimeError("boom at step 3")
+        return {"x": np.full((2,), step)}
+
+    pipe = DataPipeline(mk, None, prefetch=2)
+    got = []
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="boom at step 3"):
+        for _ in range(10):
+            got.append(next(pipe))
+    assert time.monotonic() - t0 < 5.0          # surfaced, not a hang
+    assert [s for s, _ in got] == [0, 1, 2]     # good batches drained first
+    assert pipe.close() is True
+
+
+def test_pipeline_injected_fault_via_raising_at_step():
+    """The ft/faults injector composes with the pipeline: deterministic
+    producer death at a chosen nominal step."""
+    from repro.ft.faults import raising_at_step
+    mk = raising_at_step(lambda s, sh: {"x": np.full((2,), s)}, 2)
+    pipe = DataPipeline(mk, None, prefetch=1)
+    assert next(pipe)[0] == 0
+    assert next(pipe)[0] == 1
+    with pytest.raises(RuntimeError, match="injected data fault"):
+        next(pipe)
+    pipe.close()
+
+
 def test_pipeline_resume_matches_schedule_tail():
     """start_step > 0 reproduces the TAIL of smd_schedule exactly — same
     drop positions and counts — which is what makes chunked resume land on

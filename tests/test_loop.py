@@ -186,6 +186,46 @@ def test_chunked_straggler_drops_at_chunk_granularity():
     assert len(tr.history) == tr.executed_steps
 
 
+def test_chunked_straggler_deadline_is_per_step():
+    """PR 10: the deadline applies PER SCANNED STEP (timed chunk program:
+    one ordered callback per step), not per chunk mean.  With a deadline
+    below every step's device time, ONE finalized chunk arms K drops —
+    under the old chunk-granularity check a whole run of N/K chunks could
+    arm at most N/K.  24 steps at K=4 finalize at most 4 executed chunks,
+    so > 4 straggler drops proves per-step arming."""
+    exp = _exp("lm", smd=False)
+    mk = _mk(exp)
+    tr = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk,
+                 chunk_steps=4, deadline_s=1e-9)
+    tr.run(24)
+    assert tr.dropped_steps + tr.executed_steps == 24
+    assert int(tr.state.step) == 24
+    assert tr.straggler_dropped_steps == tr.dropped_steps   # smd off
+    assert tr.straggler_dropped_steps > 4
+    assert len(tr.history) == tr.executed_steps
+
+
+def test_timed_chunk_instrumentation_is_invisible():
+    """The timed chunk program (deadline_s > 0) only observes: with a
+    deadline nothing exceeds, the loss curve, counters and params are
+    bit-identical to the untimed chunked run."""
+    exp = _exp("lm")
+    mk = _mk(exp)
+    trA = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk,
+                  chunk_steps=4)
+    hA = trA.run(16)
+    trB = Trainer(exp, init_train_state(jax.random.PRNGKey(0), exp), mk,
+                  chunk_steps=4, deadline_s=1e9)
+    hB = trB.run(16)
+    assert _curve(hA) == _curve(hB)
+    assert trB.straggler_dropped_steps == 0
+    assert (trA.executed_steps, trA.dropped_steps) == \
+        (trB.executed_steps, trB.dropped_steps)
+    for a, b in zip(jax.tree.leaves(trA.state.params),
+                    jax.tree.leaves(trB.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_chunked_partial_tail_chunk():
     """Window not divisible by K: the tail chunk is shorter, the counter
     and history still line up with the per-step loop."""

@@ -1,10 +1,12 @@
 """Repo convention linter (analysis/repo_lint.py): pallas_call containment,
-REPRO_* env-read containment and host-sync containment over src/repro."""
+REPRO_* env-read containment, host-sync containment and swallowed-exception
+containment over src/repro."""
 import pytest
 
 from repro.analysis import lint_repo
-from repro.analysis.repo_lint import (_HOST_SYNC_ALLOWED,
-                                      check_host_sync_allowlist, lint_source)
+from repro.analysis.repo_lint import (_HOST_SYNC_ALLOWED, _SWALLOW_ALLOWED,
+                                      check_host_sync_allowlist,
+                                      check_swallow_allowlist, lint_source)
 
 
 def test_repo_is_clean():
@@ -76,3 +78,43 @@ def test_allowlisted_module_may_sync():
     src = "import jax\nv = jax.device_get(x)\n"
     path = next(iter(_HOST_SYNC_ALLOWED))
     assert lint_source(src, path) == []
+
+
+def test_bare_except_is_flagged():
+    src = "try:\n    f()\nexcept:\n    handle()\n"
+    (f,) = lint_source(src, "repro/models/sneaky.py")
+    assert f.rule == "swallowed-exception" and f.line == 3
+    assert "bare except" in f.message
+
+
+def test_broad_except_pass_is_flagged():
+    for src in ("try:\n    f()\nexcept Exception:\n    pass\n",
+                "try:\n    f()\nexcept BaseException as e:\n    ...\n",
+                "try:\n    f()\nexcept (ValueError, Exception):\n    pass\n"):
+        findings = lint_source(src, "repro/ft/supervisor.py")
+        assert [f.rule for f in findings] == ["swallowed-exception"], src
+
+
+def test_handled_broad_and_specific_swallows_are_allowed():
+    for src in (
+            # broad catch that HANDLES (captures/re-raises) is fine — the
+            # pipeline's producer-thread capture is exactly this shape
+            "try:\n    f()\nexcept BaseException as e:\n"
+            "    err = e\n    raise\n",
+            # swallowing a SPECIFIC exception is a normal idiom
+            "try:\n    f()\nexcept queue.Empty:\n    pass\n",
+            "try:\n    f()\nexcept (OSError, ValueError):\n    pass\n"):
+        assert lint_source(src, "repro/data/pipeline.py") == [], src
+
+
+def test_swallow_allowlist_requires_justification(monkeypatch):
+    check_swallow_allowlist()            # the shipped allowlist must pass
+    with pytest.raises(ValueError, match="justification"):
+        check_swallow_allowlist({"repro/models/sneaky.py": "  "})
+    # a justified entry exempts the module
+    from repro.analysis import repo_lint as rl
+    monkeypatch.setitem(rl._SWALLOW_ALLOWED, "repro/legacy/vendored.py",
+                        "vendored code retained verbatim")
+    src = "try:\n    f()\nexcept Exception:\n    pass\n"
+    assert lint_source(src, "repro/legacy/vendored.py") == []
+    assert lint_source(src, "repro/legacy/other.py") != []
